@@ -1,0 +1,95 @@
+"""Shared benchmark infrastructure.
+
+Defines the five reasoning-task workload descriptions (RAVEN, I-RAVEN, PGM,
+CVR, SVRT analogues), the NVSA operation-graph builder used by the cogsim
+end-to-end benchmarks (Figs. 15/16/18/19, Tab. X), and timing helpers.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import scheduler as sch
+
+# (panels per task, vector dim, factorizer iters, symbolic circconvs per task)
+TASKS = {
+    "RAVEN": {"panels": 16, "d": 1024, "iters": 10, "k": 210, "img": 32},
+    "I-RAVEN": {"panels": 16, "d": 1024, "iters": 10, "k": 210, "img": 32},
+    "PGM": {"panels": 16, "d": 1024, "iters": 16, "k": 420, "img": 32},
+    "CVR": {"panels": 8, "d": 512, "iters": 8, "k": 128, "img": 32},
+    "SVRT": {"panels": 4, "d": 512, "iters": 8, "k": 64, "img": 32},
+}
+
+
+def nvsa_op_graph(task: dict, batches: int = 2) -> list:
+    """CogSys-style heterogeneous op graph for one NVSA-like workload.
+
+    Neural: 3 im2col'd conv GEMMs + 2 head GEMMs per panel batch.
+    Symbolic: per factorizer iteration, circconv unbinds (k convs of dim d)
+    + codebook similarity GEMV + SIMD normalisation; then abduction convs.
+    """
+    P, d, iters, k = task["panels"], task["d"], task["iters"], task["k"]
+    ops = []
+    for b in range(batches):
+        pre = f"b{b}_"
+        # neural perception: ResNet18-class frontend (~1.8 GFLOP/panel), the
+        # scale NVSA actually runs — four im2col'd conv stages per panel batch
+        ops += [
+            sch.Op(pre + "conv1", "conv2d", (P * 56 * 56, 147, 64), batch=b),
+            sch.Op(pre + "conv2", "conv2d", (P * 28 * 28, 576, 128),
+                   deps=(pre + "conv1",), batch=b),
+            sch.Op(pre + "conv3", "conv2d", (P * 14 * 14, 1152, 256),
+                   deps=(pre + "conv2",), batch=b),
+            sch.Op(pre + "conv4", "conv2d", (P * 7 * 7, 2304, 512),
+                   deps=(pre + "conv3",), batch=b),
+            sch.Op(pre + "head", "gemm", (P, 512, 512), deps=(pre + "conv4",), batch=b),
+            sch.Op(pre + "head2", "gemm", (P, 512, d), deps=(pre + "head",), batch=b),
+        ]
+        prev = pre + "head2"
+        # symbolic factorization loop
+        for it in range(iters):
+            cc = sch.Op(f"{pre}fact{it}_cc", "circconv", (k, d), deps=(prev,),
+                        batch=b, symbolic=True)
+            sim = sch.Op(f"{pre}fact{it}_sim", "gemm", (k, d, 32),
+                         deps=(cc.name,), batch=b, symbolic=True)
+            nrm = sch.Op(f"{pre}fact{it}_norm", "simd", (k * d,),
+                         deps=(sim.name,), batch=b, symbolic=True)
+            ops += [cc, sim, nrm]
+            prev = nrm.name
+        # abduction + execution
+        ops += [
+            sch.Op(pre + "abduce", "circconv", (P * 6, 32), deps=(prev,),
+                   batch=b, symbolic=True),
+            sch.Op(pre + "select", "gemm", (8, d, 8), deps=(pre + "abduce",),
+                   batch=b, symbolic=True),
+        ]
+    return ops
+
+
+def graph_flops_bytes(ops) -> tuple:
+    neural_f = sum(o.flops() for o in ops if not o.symbolic)
+    sym_f = sum(o.flops() for o in ops if o.symbolic)
+    neural_b = sum(o.bytes_moved(2) for o in ops if not o.symbolic)
+    # symbolic ops stream with poor reuse: count fp32 traffic
+    sym_b = sum(o.bytes_moved(4) for o in ops if o.symbolic)
+    return neural_f, sym_f, neural_b, sym_b
+
+
+def timeit(fn, *args, warmup: int = 2, iters: int = 5) -> float:
+    """Median wall-time (s) of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def row(benchmark: str, name: str, us_per_call, derived) -> dict:
+    return {"benchmark": benchmark, "name": name,
+            "us_per_call": "" if us_per_call is None else round(us_per_call, 3),
+            "derived": derived}

@@ -1,0 +1,35 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is NOT TPU-predictive;
+the derived column carries the structural metrics that are)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timeit
+from repro.core.quantization import quantize
+from repro.kernels.circconv import kernel as cck
+from repro.kernels.circconv import ref as ccr
+from repro.kernels.similarity import kernel as simk
+
+
+def run():
+    rows = []
+    for n, L in [(64, 256), (256, 1024)]:
+        x = jax.random.normal(jax.random.PRNGKey(0), (n, L))
+        y = jax.random.normal(jax.random.PRNGKey(1), (n, L))
+        t_k = timeit(lambda a, b: cck.circconv_rows(a, b, interpret=True), x, y,
+                     warmup=1, iters=3)
+        t_r = timeit(jax.jit(ccr.circconv_rows_ref), x, y, warmup=1, iters=3)
+        flops = 2 * n * L * L
+        hbm = 3 * n * L * 4
+        rows.append(row("kernels", f"circconv_rows(n={n},L={L})", t_k * 1e6,
+                        f"intensity={flops/hbm:.0f}FLOP/B hbm_per_conv=O(d) "
+                        f"ref_us={t_r*1e6:.0f}"))
+    q = jax.random.normal(jax.random.PRNGKey(2), (64, 1024))
+    w = quantize(jax.random.normal(jax.random.PRNGKey(3), (512, 1024)), "int8")
+    t = timeit(lambda a: simk.similarity_int8(a, w.values, w.scale,
+                                              interpret=True), q,
+               warmup=1, iters=3)
+    rows.append(row("kernels", "similarity_int8(64x512x1024)", t * 1e6,
+                    "codebook HBM traffic 1B/elem (4x less than fp32)"))
+    return rows

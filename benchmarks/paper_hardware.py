@@ -1,0 +1,230 @@
+"""Hardware-side paper reproductions via cogsim: Figs. 11, 15-19, Tabs. II, V, X."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import TASKS, graph_flops_bytes, nvsa_op_graph, row
+from repro.cogsim import model as hw
+from repro.core import scheduler as sch
+
+
+def tab02_kernel_analysis():
+    """Compute/memory character of neural vs symbolic kernels (model-based)."""
+    rows = []
+    # sgemm: high reuse; circconv-as-elementwise streaming: ~zero reuse.
+    m, k, n = 4096, 4096, 4096
+    ai_gemm = 2 * m * k * n / ((m * k + k * n + m * n) * 4)
+    d = 1024
+    ai_vec = (2 * d * d) / (3 * d * d * 4)  # GPU gather-based circconv
+    ai_elem = 1 / 12.0
+    dev = hw.RTX2080TI
+    for name, ai, symbolic in [("sgemm_nn", ai_gemm, False),
+                               ("vectorized_elem(circconv)", ai_vec, True),
+                               ("elementwise", ai_elem, True)]:
+        ridge = dev.peak_flops / dev.mem_bw
+        bound = "compute" if ai > ridge else "memory"
+        util = min(1.0, ai / ridge)
+        rows.append(row("tab02", name, None,
+                        f"intensity={ai:.2f}FLOP/B {bound}-bound "
+                        f"compute_util<={util:.1%} "
+                        f"(paper: symbolic 2-3% compute, ~80-90% DRAM BW)"))
+    return rows
+
+
+def tab05_design_choice():
+    return [row("tab05", r["config"], None,
+                f"area={r['area']}x latency={r['latency']}x energy={r['energy']}x "
+                f"util={r['utilization']:.0%}")
+            for r in hw.heterogeneous_pe_comparison()]
+
+
+def fig11_bs_dataflow():
+    """Fig. 11a/c: BS dataflow vs GEMV on a systolic cell for 3 circconvs."""
+    rows = []
+    k, d = 3, 32
+    cell = hw.ArrayConfig("cell", num_cells=1, cell_dim=32)
+    bs = hw.bs_circconv_cycles(cell, k, d)
+    sa = hw.sa_circconv_as_gemv_cycles(
+        hw.ArrayConfig("sa", num_cells=1, cell_dim=32, reconfigurable=False,
+                       cwp=False, scwp=False), k, d)
+    rows.append(row("fig11", "bs-dataflow(3xconv,d=32)", None,
+                    f"cycles={bs['compute_cycles']:.0f} footprint=O(d) "
+                    f"mapping={bs['mapping']}"))
+    rows.append(row("fig11", "tpu-gemv(3xconv,d=32)", None,
+                    f"cycles={sa['compute_cycles']:.0f} footprint=O(d^2) "
+                    f"speedup={sa['compute_cycles']/bs['compute_cycles']:.1f}x"))
+    # roofline comparison at 2^14 PEs
+    d = 1024
+    ai_bs = d * (2 * d - 1) / (3 * d)  # paper's CogSys arithmetic intensity
+    ai_gpu = d * (2 * d - 1) / (d * d + 2 * d)  # paper's GPU intensity
+    rows.append(row("fig11", "arithmetic-intensity", None,
+                    f"cogsys_bs={ai_bs:.0f}FLOP/elem gpu={ai_gpu:.2f}FLOP/elem "
+                    f"-> BS compute-bound, GPU memory-bound"))
+    return rows
+
+
+def fig17_circconv_speedup():
+    """Sweep vector dim and #convs: CogSys vs TPU-like SA vs GPU."""
+    rows = []
+    best_tpu, best_gpu = 0.0, 0.0
+    for d in (64, 128, 256, 512, 1024):
+        for k in (16, 64, 210, 512):
+            c = hw.bs_circconv_cycles(hw.COGSYS, k, d)["cycles"] / hw.COGSYS.freq_hz
+            t = hw.sa_circconv_as_gemv_cycles(hw.TPU_LIKE, k, d)["cycles"] \
+                / hw.TPU_LIKE.freq_hz
+            flops = 2.0 * k * d * d
+            g = hw.gpu_op_seconds(hw.RTX2080TI, flops, k * (d * d + 2 * d) * 4,
+                                  symbolic=True)
+            best_tpu = max(best_tpu, t / c)
+            best_gpu = max(best_gpu, g / c)
+            if (d, k) in ((1024, 210), (64, 512), (1024, 512)):
+                rows.append(row("fig17", f"d={d},k={k}", None,
+                                f"vs_tpu={t/c:.1f}x vs_gpu={g/c:.1f}x"))
+    rows.append(row("fig17", "max-speedup", None,
+                    f"vs_tpu={best_tpu:.1f}x vs_gpu={best_gpu:.1f}x "
+                    f"(paper: 75.96x / 18.90x)"))
+    return rows
+
+
+def _e2e_seconds(task: dict, device) -> dict:
+    """End-to-end seconds per task batch on each platform."""
+    ops = nvsa_op_graph(task, batches=2)
+    nf, sf, nb, sb = graph_flops_bytes(ops)
+    if isinstance(device, hw.GPURoofline):
+        t = hw.gpu_op_seconds(device, nf, nb, symbolic=False) + \
+            hw.gpu_op_seconds(device, sf, sb, symbolic=True)
+        return {"seconds": t}
+    s = sch.schedule(ops, device, interleave=True)
+    return {"seconds": s.makespan / device.freq_hz, "util": s.utilization}
+
+
+def fig15_e2e_runtime():
+    rows = []
+    for tname, task in TASKS.items():
+        cog = _e2e_seconds(task, hw.COGSYS)["seconds"]
+        per = {dev.name: _e2e_seconds(task, dev)["seconds"]
+               for dev in (hw.RTX2080TI, hw.XEON_CPU, hw.JETSON_TX2, hw.XAVIER_NX)}
+        sp = {k: v / cog for k, v in per.items()}
+        rows.append(row("fig15", tname, cog * 1e6 / 2,
+                        f"per-task={cog/2*1e3:.2f}ms realtime={'YES' if cog/2 < 0.3 else 'no'} "
+                        + " ".join(f"vs_{k}={v:.0f}x" for k, v in sp.items())))
+    return rows
+
+
+def fig16_energy():
+    rows = []
+    powers = {"rtx2080ti": 250, "xeon": 145, "tx2": 15, "nx": 20}
+    for tname, task in TASKS.items():
+        cog_t = _e2e_seconds(task, hw.COGSYS)["seconds"]
+        cog_e = cog_t * hw.area_power(hw.COGSYS, "int8")["power_w"]
+        effs = {}
+        for dev in (hw.RTX2080TI, hw.XEON_CPU, hw.JETSON_TX2, hw.XAVIER_NX):
+            t = _e2e_seconds(task, dev)["seconds"]
+            effs[dev.name] = (t * powers[dev.name]) / cog_e
+        rows.append(row("fig16", tname, None,
+                        " ".join(f"eff_vs_{k}={v:.0f}x" for k, v in effs.items())
+                        + " (paper: ~2 orders vs GPU)"))
+    return rows
+
+
+def fig18_ml_accelerators():
+    rows = []
+    task = TASKS["RAVEN"]
+    ops = nvsa_op_graph(task, batches=2)
+
+    def subset(pred):
+        keep = [o for o in ops if pred(o)]
+        names = {o.name for o in keep}
+        import dataclasses as dc
+        return [dc.replace(o, deps=tuple(d for d in o.deps if d in names))
+                for o in keep]
+
+    neural = subset(lambda o: not o.symbolic)
+    symbolic = subset(lambda o: o.symbolic)
+    for dev in (hw.COGSYS, hw.TPU_LIKE, hw.GEMMINI_LIKE, hw.MTIA_LIKE):
+        tn = sch.schedule(neural, dev, interleave=True).makespan / dev.freq_hz
+        ts = sch.schedule(symbolic, dev, interleave=True).makespan / dev.freq_hz
+        te = sch.schedule(ops, dev, interleave=True).makespan / dev.freq_hz
+        rows.append(row("fig18", dev.name, te * 1e6,
+                        f"neural={tn*1e3:.2f}ms symbolic={ts*1e3:.2f}ms "
+                        f"e2e={te*1e3:.2f}ms"))
+    base = sch.schedule(ops, hw.TPU_LIKE, interleave=True).makespan
+    ours = sch.schedule(ops, hw.COGSYS, interleave=True).makespan
+    rows.append(row("fig18", "e2e-speedup-vs-tpu-like", None, f"{base/ours:.1f}x"))
+    return rows
+
+
+def fig19_hw_ablation():
+    rows = []
+    task = TASKS["RAVEN"]
+    ops = nvsa_op_graph(task, batches=3)
+    full = sch.schedule(ops, hw.COGSYS, interleave=True).makespan
+    no_sched = sch.schedule(ops, hw.COGSYS, interleave=False).makespan
+    no_so = sch.schedule(ops, hw.COGSYS_NO_SCALEOUT, interleave=False).makespan
+    no_nspe = sch.schedule(ops, hw.COGSYS_NO_NSPE, interleave=False).makespan
+    rows.append(row("fig19", "full-cogsys", None, f"makespan={full:.0f}cyc"))
+    rows.append(row("fig19", "w/o-adSCH", None,
+                    f"+{(no_sched-full)/no_sched:.0%} runtime (paper: adSCH saves ~28%)"))
+    rows.append(row("fig19", "w/o-adSCH+scale-out", None,
+                    f"reduction-vs-full={(no_so-full)/no_so:.0%} (paper: 61%)"))
+    rows.append(row("fig19", "w/o-adSCH+SO+nsPE", None,
+                    f"reduction-vs-full={(no_nspe-full)/no_nspe:.0%} (paper: 71%)"))
+    return rows
+
+
+def tab10_codesign():
+    rows = []
+    task = TASKS["RAVEN"]
+    nx = hw.XAVIER_NX
+    ops_f = nvsa_op_graph(task, batches=2)
+    # NVSA baseline: its own resonator needs ~15% more iterations without the
+    # stochasticity trick (our Tab. VIII measurement) AND sweeps the ~38 MB
+    # product codebook once per panel for the attribute lookup.
+    ops_b = nvsa_op_graph(dict(task, iters=int(task["iters"] * 1.2)), batches=2)
+    nf, sf, nb, sb = graph_flops_bytes(ops_f)
+    _, sf_b, _, sb_b = graph_flops_bytes(ops_b)
+    n_codebook = 38 * 2**20 // (task["d"] * 4)
+    sf_b += 2.0 * 2 * task["panels"] * task["d"] * n_codebook
+    sb_b += 2 * task["panels"] * (n_codebook * task["d"]) * 4.0
+    t_base = hw.gpu_op_seconds(nx, nf, nb, False) + \
+        hw.gpu_op_seconds(nx, sf_b, sb_b, True)
+    t_alg = hw.gpu_op_seconds(nx, nf, nb, False) + hw.gpu_op_seconds(nx, sf, sb, True)
+    t_cog = sch.schedule(ops_f, hw.COGSYS, interleave=True).makespan / hw.COGSYS.freq_hz
+    rows.append(row("tab10", "NVSA@XavierNX", t_base * 1e6, "100%"))
+    rows.append(row("tab10", "CogSysAlg@XavierNX", t_alg * 1e6,
+                    f"{t_alg/t_base:.1%} (paper: 89.5%)"))
+    rows.append(row("tab10", "CogSysAlg@CogSysAccel", t_cog * 1e6,
+                    f"{t_cog/t_base:.2%} (paper: 1.76%)"))
+    return rows
+
+
+def run():
+    rows = []
+    for fn in (tab02_kernel_analysis, tab05_design_choice, fig11_bs_dataflow,
+               fig04c_scalability, fig15_e2e_runtime, fig16_energy,
+               fig17_circconv_speedup, fig18_ml_accelerators, fig19_hw_ablation,
+               tab10_codesign):
+        rows += fn()
+    return rows
+
+
+def fig04c_scalability():
+    """Fig. 4c: neuro/symbolic runtime share is stable as task size grows
+    (2x2 -> 3x3 RPM), while total runtime scales ~5x on the GPU baselines."""
+    rows = []
+    base = dict(TASKS["RAVEN"])
+    small = dict(base, panels=7, k=base["k"] // 2, iters=base["iters"] // 2)
+    out = {}
+    for name, task in (("2x2", small), ("3x3", base)):
+        ops = nvsa_op_graph(task, batches=2)
+        nf, sf, nb, sb = graph_flops_bytes(ops)
+        t_n = hw.gpu_op_seconds(hw.RTX2080TI, nf, nb, symbolic=False)
+        t_s = hw.gpu_op_seconds(hw.RTX2080TI, sf, sb, symbolic=True)
+        out[name] = (t_n, t_s)
+        rows.append(row("fig04c", f"rpm-{name}", (t_n + t_s) * 1e6,
+                        f"symbolic_share={t_s/(t_n+t_s):.1%}"))
+    scale = sum(out["3x3"]) / sum(out["2x2"])
+    rows.append(row("fig04c", "task-size-scaling", None,
+                    f"3x3/2x2 runtime={scale:.2f}x, share stable "
+                    f"(paper: 5.02x avg, 91.6%->87.4%)"))
+    return rows

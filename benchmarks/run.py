@@ -1,0 +1,37 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV and writes artifacts/bench.json.
+    PYTHONPATH=src python -m benchmarks.run [--only fig17 tab08 ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    from benchmarks import kernels_micro, paper_hardware, paper_tables
+
+    rows = []
+    for mod in (paper_hardware, kernels_micro, paper_tables):
+        rows += mod.run()
+    if args.only:
+        rows = [r for r in rows if any(o in r["benchmark"] for o in args.only)]
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['benchmark']}/{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+    os.makedirs("artifacts", exist_ok=True)
+    with open("artifacts/bench.json", "w") as f:
+        json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,98 @@
+"""End-to-end driver: serve RAVEN abduction tasks with batched requests.
+
+The paper's headline capability — real-time abduction reasoning — as a
+serving loop: batches of RPM tasks stream through perception -> factorization
+-> abduction -> execution -> answer selection, using the adSCH-style
+pipelined solver (symbolic of batch t-1 overlapped with neural of batch t).
+
+Trains the CNN frontend first if no artifact exists (~3 min on CPU), then
+reports accuracy and per-task latency.
+
+    PYTHONPATH=src python examples/raven_abduction.py [--tasks 128]
+"""
+import argparse
+import os
+import pickle
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import raven
+from repro.models import cnn, nvsa
+from repro.train import optimizer as optim
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts")
+
+
+def get_frontend(cfg, cbs, steps=4000):
+    path = os.path.join(ART, "nvsa_frontend.pkl")
+    if os.path.exists(path):
+        return jax.tree.map(jnp.asarray, pickle.load(open(path, "rb")))
+    print(f"training frontend for {steps} steps...")
+    params = cnn.init(jax.random.split(jax.random.PRNGKey(0))[1], cfg.cnn)
+    opt = optim.adamw(optim.cosine_schedule(3e-3, 100, steps))
+    ostate = opt.init(params)
+
+    @jax.jit
+    def step(params, ostate, batch):
+        (loss, m), g = jax.value_and_grad(nvsa.frontend_loss, has_aux=True)(
+            params, batch, cbs, cfg)
+        g, _ = optim.clip_by_global_norm(g, 1.0)
+        params, ostate = opt.update(g, ostate, params)
+        return params, ostate, m
+
+    rng = np.random.default_rng(0)
+    for i in range(steps):
+        b = {k: jnp.asarray(v) for k, v in
+             raven.attribute_classification_batch(rng, 128).items()}
+        params, ostate, m = step(params, ostate, b)
+        if i % 1000 == 0:
+            print(f"  step {i}: cos={float(m['cosine']):.3f}")
+    os.makedirs(ART, exist_ok=True)
+    pickle.dump(jax.tree.map(np.asarray, params), open(path, "wb"))
+    return params
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tasks", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=32)
+    args = ap.parse_args()
+    cfg = nvsa.NVSAConfig()
+    k_cb, _ = jax.random.split(jax.random.PRNGKey(0))
+    cbs, mask = nvsa.make_codebooks(k_cb, cfg)
+    params = get_frontend(cfg, cbs)
+
+    ds = raven.RavenDataset(raven.RavenConfig(batch_size=args.batch, seed=99))
+    n_batches = max(1, args.tasks // args.batch)
+    batches = [ds.next_batch() for _ in range(n_batches)]
+    imgs = jnp.stack([b["images"] for b in batches])
+    cands = jnp.stack([b["candidate_images"] for b in batches])
+    answers = np.stack([b["answer"] for b in batches])
+
+    # adSCH-style pipelined stream: symbolic(t-1) || neural(t) in one XLA step
+    t0 = time.perf_counter()
+    preds = nvsa.pipelined_solve_scan(params, imgs, cands, cbs, mask,
+                                      jax.random.PRNGKey(7), cfg)
+    preds = np.asarray(jax.block_until_ready(preds))
+    dt = time.perf_counter() - t0
+    acc = (preds == answers).mean()
+    n = n_batches * args.batch
+    print(f"solved {n} RPM tasks: accuracy={acc:.3f} "
+          f"({dt:.2f}s total, {dt/n*1e3:.1f} ms/task on CPU; "
+          f"paper's accelerator target: <0.3 s/task)")
+    # non-pipelined reference for the interleaving speedup
+    t0 = time.perf_counter()
+    for b in batches:
+        out = nvsa.solve(params, {k: jnp.asarray(v) for k, v in b.items()},
+                         cbs, mask, jax.random.PRNGKey(7), cfg)
+        jax.block_until_ready(out["answer"])
+    dt_seq = time.perf_counter() - t0
+    print(f"sequential solver: {dt_seq:.2f}s -> pipelined speedup "
+          f"{dt_seq/dt:.2f}x (adSCH software analogue)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""llama3.2-3b [dense]: 28L d=3072 24H (GQA kv=8) d_ff=8192 vocab=128256.
+[hf:meta-llama/Llama-3.2-1B; unverified]
+"""
+from repro.configs.common import ArchSpec
+from repro.nn.transformer import ModelConfig
+
+
+def full() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-3b", n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8,
+        d_ff=8192, vocab=128256, head_dim=128, rope_theta=5e5)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="llama3.2-smoke", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+        d_ff=128, vocab=512, head_dim=16, rope_theta=5e5, remat=False)
+
+
+SPEC = ArchSpec("llama3.2-3b", "dense", full, smoke,
+                source="hf:meta-llama/Llama-3.2-1B; unverified")

@@ -1,0 +1,46 @@
+"""Exhaustive product-codebook baseline (the thing CogSys replaces).
+
+Pre-binds all M^F attribute combinations into one giant codebook and decodes
+a query by brute-force similarity search.  This is the paper's Sec. III-C
+"symbolic knowledge codebook" whose tens-to-hundreds-of-MB footprint makes it
+"impractical to be cached on-chip"; we implement it both as the accuracy
+baseline and the memory/latency baseline for Fig. 4d / Tab. VIII.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vsa
+from repro.core.vsa import VSAConfig
+
+
+class ProductCodebook(NamedTuple):
+    vectors: jax.Array  # [M**F, D]
+    shape: tuple  # (M,) * F for unravelling
+
+
+def build_product_codebook(codebooks: jax.Array, cfg: VSAConfig) -> ProductCodebook:
+    """Bind every combination: [F, M, D] -> [M^F, D] (spectral-domain outer product)."""
+    F, M, D = codebooks.shape
+    spec = jnp.fft.rfft(cfg.blockify(codebooks.astype(jnp.float32)), axis=-1)  # [F,M,B,Lf]
+    prod = spec[0]
+    for f in range(1, F):
+        prod = (prod[:, None] * spec[f][None]).reshape(-1, *prod.shape[1:])
+    vecs = cfg.flatten(jnp.fft.irfft(prod, n=cfg.lanes, axis=-1))
+    return ProductCodebook(vecs, (M,) * F)
+
+
+def brute_force_decode(q: jax.Array, pcb: ProductCodebook) -> jax.Array:
+    """Argmax similarity over all M^F combinations -> [F] indices."""
+    scores = vsa.codebook_similarity(q, pcb.vectors)
+    flat = jnp.argmax(scores, axis=-1)
+    return jnp.stack(jnp.unravel_index(flat, pcb.shape)).astype(jnp.int32).T.squeeze()
+
+
+def product_codebook_bytes(num_factors: int, codebook_size: int, dim: int,
+                           itemsize: int = 4) -> int:
+    return (codebook_size ** num_factors) * dim * itemsize

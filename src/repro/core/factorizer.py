@@ -1,0 +1,278 @@
+"""CogSys efficient symbolic factorization (paper Sec. IV-A, Fig. 8).
+
+Replaces the O(M^F) product-combination codebook with F codebooks of M atoms
+searched *in superposition*: iteratively (1) unbind all-but-one factor from
+the query, (2) score the unbound estimate against that factor's codebook,
+(3) project the scores back onto the codebook to form the next estimate.
+Convergence is reached when the re-bound hard decisions reconstruct the query.
+
+Two algebras:
+
+  * ``bipolar``  (NVSA-style, MAP): dense +-1 atoms, binding = Hadamard
+    product, estimates saturate through sign() — the high-capacity regime the
+    paper's workloads (NVSA/MIMONet/LVRF) operate in, where limit cycles are
+    real and **stochasticity injection** (Sec. IV-B, noise on the similarity
+    scores, scaled relative to their std) measurably helps.
+  * ``unitary``  (block-code HRR): unit-spectrum real atoms, binding =
+    block-wise circular convolution (the hardware-relevant kernel), estimates
+    re-projected to unit spectrum each step.
+
+Everything is a fixed-shape ``jax.lax.while_loop``, so the factorizer jits,
+vmaps over query batches, and shards (queries over `data`, codebook rows over
+`model`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vsa
+from repro.core.quantization import QTensor, quantize, quantized_matvec
+from repro.core.vsa import VSAConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class FactorizerConfig:
+    vsa: VSAConfig
+    num_factors: int  # F
+    codebook_size: int  # M per factor
+    algebra: Literal["bipolar", "unitary"] = "bipolar"
+    max_iters: int = 100
+    noise_std: float = 0.0  # relative (x std of scores) noise on Step 2
+    proj_noise_std: float = 0.0  # relative noise on Step 3 projection
+    activation: Literal["identity", "abs", "relu", "softmax"] = "identity"
+    temperature: float = 1.0  # softmax sharpness when activation == 'softmax'
+    conv_threshold: float = 0.9  # reconstruction cosine to declare convergence
+    codebook_fmt: Literal["fp32", "int8", "fp8_e4m3"] = "fp32"
+    synchronous: bool = False  # True = Jacobi sweep; False = Gauss-Seidel (better)
+    restart_every: int = 0  # >0: re-randomise estimates every k stuck iterations
+    fused_step: bool = False  # bipolar+synchronous only: run the whole sweep in
+    # the fused Pallas kernel (kernels/resonator_step) — halves codebook HBM
+    # traffic per iteration; requires noise_std == 0 and a dense codebook.
+
+    def __post_init__(self):
+        if self.algebra == "bipolar" and self.vsa.lanes != 1:
+            raise ValueError("bipolar algebra requires lanes == 1 "
+                             f"(dim == blocks), got L={self.vsa.lanes}")
+
+
+class FactorizerResult(NamedTuple):
+    indices: jax.Array  # [F] int32 decoded atom per factor
+    iterations: jax.Array  # [] int32 iterations executed
+    converged: jax.Array  # [] bool
+    reconstruction_sim: jax.Array  # [] float32 cosine(q, bind(decoded))
+    scores: jax.Array  # [F, M] final similarity scores (soft beliefs)
+
+
+def make_codebooks(key: jax.Array, cfg: FactorizerConfig, dtype=jnp.float32) -> jax.Array:
+    """F codebooks of M atoms: [F, M, D]."""
+    shape = (cfg.num_factors, cfg.codebook_size)
+    if cfg.algebra == "bipolar":
+        return vsa.random_bipolar(key, shape, cfg.vsa, dtype)
+    return vsa.random_unitary(key, shape, cfg.vsa, dtype)
+
+
+def bind_combo(codebooks: jax.Array, indices: jax.Array, cfg: VSAConfig) -> jax.Array:
+    """Product vector of one atom per factor: bind(X^1[i1], ..., X^F[iF])."""
+    atoms = jnp.take_along_axis(codebooks, indices[:, None, None], axis=1)[:, 0]
+    return vsa.bind_all(atoms, cfg)
+
+
+def _norm(x: jax.Array, cfg: FactorizerConfig) -> jax.Array:
+    if cfg.algebra == "bipolar":
+        return vsa.normalize_sign(x)
+    return vsa.normalize_unitary(x, cfg.vsa)
+
+
+def _unbind_all_but_one(q: jax.Array, est: jax.Array, cfg: FactorizerConfig) -> jax.Array:
+    """x~_i = q unbound by the product of the other factors' estimates [F, D].
+
+    Estimates are normalised (self-inverse bipolar / unit-spectrum unitary),
+    so inv(prod / est_i) reduces to conj(prod) * est_i in the spectral domain
+    and to prod * est_i elementwise in the bipolar corner.
+    """
+    vcfg = cfg.vsa
+    if cfg.algebra == "bipolar":
+        prod = jnp.prod(est, axis=0)  # [D]
+        return q[None] * prod[None] * est  # est_i^2 == 1
+    q_spec = jnp.fft.rfft(vcfg.blockify(q.astype(jnp.float32)), axis=-1)
+    est_spec = jnp.fft.rfft(vcfg.blockify(est.astype(jnp.float32)), axis=-1)
+    prod = jnp.prod(est_spec, axis=0)
+    unbound_spec = q_spec[None] * jnp.conj(prod)[None] * est_spec
+    return vcfg.flatten(jnp.fft.irfft(unbound_spec, n=vcfg.lanes, axis=-1))
+
+
+def _unbind_one(q: jax.Array, est: jax.Array, i: int, cfg: FactorizerConfig) -> jax.Array:
+    """x~_i for a single factor against the *current* estimates (Gauss-Seidel)."""
+    vcfg = cfg.vsa
+    if cfg.algebra == "bipolar":
+        prod = jnp.prod(est, axis=0)
+        return q * prod * est[i]
+    q_spec = jnp.fft.rfft(vcfg.blockify(q.astype(jnp.float32)), axis=-1)
+    est_spec = jnp.fft.rfft(vcfg.blockify(est.astype(jnp.float32)), axis=-1)
+    prod = jnp.prod(est_spec, axis=0)
+    unbound_spec = q_spec * jnp.conj(prod) * est_spec[i]
+    return vcfg.flatten(jnp.fft.irfft(unbound_spec, n=vcfg.lanes, axis=-1))
+
+
+def _scores(unbound: jax.Array, codebooks, cfg: FactorizerConfig) -> jax.Array:
+    """Step 2: similarity search [F, M]. Uses the fused int8 kernel when quantised."""
+    if isinstance(codebooks, QTensor):
+        use_kernel = codebooks.values.dtype == jnp.int8
+        per_factor = []
+        for f in range(cfg.num_factors):  # F is small and static
+            wf = QTensor(codebooks.values[f], codebooks.scale[f])
+            if use_kernel:
+                from repro.kernels.similarity import ops as sim_ops
+
+                per_factor.append(sim_ops.codebook_scores(unbound[f][None], wf)[0])
+            else:
+                per_factor.append(quantized_matvec(unbound[f], wf))
+        return jnp.stack(per_factor)
+    return jnp.einsum("fd,fmd->fm", unbound, codebooks)
+
+
+def _activation(alpha: jax.Array, cfg: FactorizerConfig) -> jax.Array:
+    if cfg.activation == "identity":
+        return alpha
+    if cfg.activation == "abs":
+        return jnp.abs(alpha)
+    if cfg.activation == "relu":
+        return jax.nn.relu(alpha)
+    if cfg.activation == "softmax":
+        return jax.nn.softmax(cfg.temperature * alpha, axis=-1)
+    raise ValueError(cfg.activation)
+
+
+class _State(NamedTuple):
+    est: jax.Array  # [F, D] current normalised estimates
+    it: jax.Array
+    done: jax.Array
+    sim: jax.Array
+    key: jax.Array
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def factorize(q: jax.Array, codebooks, key: jax.Array, cfg: FactorizerConfig,
+              valid_mask: jax.Array | None = None) -> FactorizerResult:
+    """Factorise one query vector q [D] into one atom index per factor.
+
+    `codebooks` is either a dense [F, M, D] array or an int8/fp8 QTensor of
+    the same logical shape (memory-optimised variant, Tab. IX).
+    `valid_mask` [F, M] marks real atoms when factors have different
+    cardinalities (e.g. RAVEN's type/size/color = 5/6/10) and codebooks are
+    padded to a common M.
+    """
+    vcfg = cfg.vsa
+    dense_cb = codebooks.dequantize() if isinstance(codebooks, QTensor) else codebooks
+    if cfg.algebra == "bipolar":
+        dense_cb = vsa.normalize_sign(dense_cb)  # de-quantised atoms stay bipolar
+    if valid_mask is None:
+        valid_mask = jnp.ones(dense_cb.shape[:2], dtype=bool)
+    neg = jnp.asarray(-1e9, jnp.float32)
+
+    F = cfg.num_factors
+
+    def factor_update(i: int, est: jax.Array, k_sim, k_proj):
+        """One factor's unbind -> score -> project update; returns (alpha_i, new_est_i)."""
+        unbound = _unbind_one(q, est, i, cfg)  # [D]           (Step 1)
+        if isinstance(codebooks, QTensor):  # fused int8 similarity kernel path
+            alpha = quantized_matvec(unbound, QTensor(codebooks.values[i],
+                                                      codebooks.scale[i]))
+        else:
+            alpha = unbound @ dense_cb[i].T
+        alpha = jnp.where(valid_mask[i], alpha, neg)  #        (Step 2)
+        if cfg.noise_std > 0:  # stochasticity, relative to score spread
+            sigma = cfg.noise_std * jnp.std(jnp.where(valid_mask[i], alpha, 0.0))
+            alpha = jnp.where(valid_mask[i],
+                              alpha + sigma * jax.random.normal(k_sim, alpha.shape),
+                              alpha)
+        w = _activation(alpha, cfg) * valid_mask[i]
+        new_est = w @ dense_cb[i]  #                           (Step 3)
+        if cfg.proj_noise_std > 0:
+            sigma = cfg.proj_noise_std * jnp.std(new_est)
+            new_est = new_est + sigma * jax.random.normal(k_proj, new_est.shape)
+        return alpha, _norm(new_est, cfg)
+
+    use_fused = (cfg.fused_step and cfg.algebra == "bipolar" and cfg.synchronous
+                 and cfg.noise_std == 0 and cfg.proj_noise_std == 0
+                 and not isinstance(codebooks, QTensor)
+                 and cfg.activation in ("identity", "abs"))
+
+    def step(s: _State) -> _State:
+        keys = jax.random.split(s.key, 2 * F + 2)
+        k_next, k_restart = keys[-1], keys[-2]
+        est = s.est
+        alphas = []
+        if use_fused:  # fused Pallas sweep (one codebook pass per iteration)
+            from repro.kernels.resonator_step import ops as rs
+
+            alpha, est = rs.fused_resonator_step(q, est, dense_cb,
+                                                 activation=cfg.activation)
+            alpha = jnp.where(valid_mask, alpha, neg)
+            alphas = list(alpha)
+        elif cfg.synchronous:  # Jacobi: all factors from the same snapshot
+            snapshot = est
+            outs = [factor_update(i, snapshot, keys[2 * i], keys[2 * i + 1])
+                    for i in range(F)]
+            alphas = [o[0] for o in outs]
+            est = jnp.stack([o[1] for o in outs])
+        else:  # Gauss-Seidel: each factor sees the freshest estimates
+            for i in range(F):
+                alpha_i, est_i = factor_update(i, est, keys[2 * i], keys[2 * i + 1])
+                est = est.at[i].set(est_i)
+                alphas.append(alpha_i)
+        alpha = jnp.stack(alphas)
+        # Convergence: do the hard-decoded atoms reconstruct q?
+        idx = jnp.argmax(alpha, axis=-1)
+        recon = bind_combo(dense_cb, idx, vcfg)
+        sim = vsa.similarity(recon, q)
+        done = sim >= cfg.conv_threshold
+        it = s.it + 1
+        if cfg.restart_every > 0:  # escape limit cycles by re-randomising
+            do_restart = jnp.logical_and(~done, it % cfg.restart_every == 0)
+            noise_est = _norm(jax.random.normal(k_restart, est.shape), cfg)
+            est = jnp.where(do_restart, noise_est, est)
+        return _State(est, it, done, sim, k_next)
+
+    def cond(s: _State) -> jax.Array:
+        return jnp.logical_and(~s.done, s.it < cfg.max_iters)
+
+    _, k_loop = jax.random.split(key)
+    # Superposition init: bundle of all (valid) atoms == zero-information estimate.
+    init_est = _norm(jnp.einsum("fm,fmd->fd", valid_mask.astype(dense_cb.dtype),
+                                dense_cb), cfg)
+    s0 = _State(init_est, jnp.int32(0), jnp.bool_(False), jnp.float32(-1.0), k_loop)
+    s = jax.lax.while_loop(cond, step, s0)
+
+    # Final decode from the converged estimates.
+    unbound = _unbind_all_but_one(q, s.est, cfg)
+    alpha = jnp.where(valid_mask, jnp.einsum("fd,fmd->fm", unbound, dense_cb), neg)
+    idx = jnp.argmax(alpha, axis=-1).astype(jnp.int32)
+    recon = bind_combo(dense_cb, idx, vcfg)
+    return FactorizerResult(idx, s.it, s.done, vsa.similarity(recon, q), alpha)
+
+
+def factorize_batch(qs: jax.Array, codebooks, key: jax.Array, cfg: FactorizerConfig,
+                    valid_mask: jax.Array | None = None):
+    """vmap over a batch of queries [N, D]; keys split per query."""
+    keys = jax.random.split(key, qs.shape[0])
+    return jax.vmap(lambda q, k: factorize(q, codebooks, k, cfg, valid_mask))(qs, keys)
+
+
+def quantize_codebooks(codebooks: jax.Array, fmt: str) -> QTensor:
+    """Per-atom quantisation of [F, M, D] codebooks (Tab. IX memory saving)."""
+    return quantize(codebooks, fmt)
+
+
+def codebook_bytes(cfg: FactorizerConfig) -> dict:
+    """Memory footprint: factorised codebooks vs the exhaustive product codebook."""
+    itemsize = {"fp32": 4, "int8": 1, "fp8_e4m3": 1}[cfg.codebook_fmt]
+    fact = cfg.num_factors * cfg.codebook_size * cfg.vsa.dim * itemsize
+    product = (cfg.codebook_size ** cfg.num_factors) * cfg.vsa.dim * itemsize
+    return {"factorized_bytes": fact, "product_bytes": product,
+            "reduction": product / max(fact, 1)}

@@ -1,0 +1,81 @@
+"""Low-precision operation (paper Sec. IV-B, Tab. IX).
+
+Symmetric per-row INT8 and FP8 (e4m3/e5m2) quantisation for codebooks,
+activations and gradients.  INT8 matmuls accumulate in int32; FP8 casts are
+storage-only on CPU (compute in bf16/fp32) which matches how v5e consumes FP8.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+FpFormat = Literal["int8", "fp8_e4m3", "fp8_e5m2"]
+
+
+@dataclasses.dataclass
+class QTensor:
+    """Quantised tensor: values plus per-row (last-axis) scales."""
+
+    values: jax.Array  # int8 / fp8
+    scale: jax.Array  # [..., 1] float32
+
+    @property
+    def shape(self):
+        return self.values.shape
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return self.values.astype(dtype) * self.scale.astype(dtype)
+
+    def nbytes(self) -> int:
+        return self.values.size * self.values.dtype.itemsize + self.scale.size * 4
+
+
+jax.tree_util.register_pytree_node(
+    QTensor,
+    lambda q: ((q.values, q.scale), None),
+    lambda _, c: QTensor(*c),
+)
+
+
+def quantize(x: jax.Array, fmt: FpFormat = "int8") -> QTensor:
+    """Symmetric per-row quantisation over the last axis."""
+    amax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    if fmt == "int8":
+        scale = amax / 127.0 + 1e-12
+        v = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    elif fmt == "fp8_e4m3":
+        scale = amax / 448.0 + 1e-12  # e4m3 max normal
+        v = (x / scale).astype(jnp.float8_e4m3fn)
+    elif fmt == "fp8_e5m2":
+        scale = amax / 57344.0 + 1e-12  # e5m2 max normal
+        v = (x / scale).astype(jnp.float8_e5m2)
+    else:
+        raise ValueError(fmt)
+    return QTensor(v, scale.astype(jnp.float32))
+
+
+def quantized_matvec(q: jax.Array, w: QTensor) -> jax.Array:
+    """scores = q [..., D] @ dequant(w [M, D]).T with integer accumulation.
+
+    For int8 codebooks the activation is also quantised so the contraction is
+    int8 x int8 -> int32 (the MXU-native path); fp8 dequantises to bf16.
+    """
+    if w.values.dtype == jnp.int8:
+        qq = quantize(q, "int8")
+        acc = jax.lax.dot_general(
+            qq.values, w.values,
+            dimension_numbers=(((qq.values.ndim - 1,), (1,)), ((), ())),
+            preferred_element_type=jnp.int32,
+        )
+        return acc.astype(jnp.float32) * qq.scale * w.scale[:, 0]
+    wf = w.dequantize(jnp.bfloat16)
+    return (q.astype(jnp.bfloat16) @ wf.T).astype(jnp.float32)
+
+
+def quantization_error(x: jax.Array, fmt: FpFormat = "int8") -> jax.Array:
+    """Relative L2 reconstruction error (monitoring / tests)."""
+    xq = quantize(x, fmt).dequantize()
+    return jnp.linalg.norm(x - xq) / (jnp.linalg.norm(x) + 1e-12)

@@ -1,0 +1,73 @@
+"""Generic computation-in-superposition wrapper (MIMONet for any backbone).
+
+The one CogSys technique that transfers directly to the assigned LM
+architectures: S token streams are embedded, bound to per-stream VSA keys,
+bundled into ONE sequence, pushed through a single backbone pass, and the
+per-stream hidden states recovered by unbinding before the LM head — S-fold
+serving throughput from one forward pass at a graceful accuracy cost.
+
+`superpose_embeddings` / `unbind_hidden` slot around any [B, S, d]-shaped
+backbone; `mimo_lm_logits` wires them around nn/transformer forward for the
+assigned archs (exercised in tests/test_superposition.py on a reduced llama).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vsa
+
+
+def make_stream_keys(key: jax.Array, n_streams: int, d_model: int,
+                     blocks: int = 8) -> jax.Array:
+    """Unitary per-stream binding keys [S, d] (exact unbinding)."""
+    cfg = vsa.VSAConfig(dim=d_model, blocks=blocks)
+    return vsa.random_unitary(key, (n_streams,), cfg)
+
+
+def superpose_embeddings(embs: jax.Array, keys: jax.Array,
+                         blocks: int = 8) -> jax.Array:
+    """embs [N, S_streams, T, d] -> one bundled sequence [N, T, d]."""
+    cfg = vsa.VSAConfig(dim=embs.shape[-1], blocks=blocks)
+    bound = vsa.bind(embs, keys[None, :, None, :], cfg)
+    return jnp.mean(bound, axis=1)
+
+
+def unbind_hidden(hidden: jax.Array, keys: jax.Array,
+                  blocks: int = 8) -> jax.Array:
+    """hidden [N, T, d] -> per-stream hidden [N, S_streams, T, d]."""
+    cfg = vsa.VSAConfig(dim=hidden.shape[-1], blocks=blocks)
+    return vsa.unbind(hidden[:, None], keys[None, :, None, :], cfg)
+
+
+def mimo_lm_logits(params, cfg, tokens: jax.Array, keys: jax.Array,
+                   blocks: int = 8):
+    """Serve S_streams token batches through ONE backbone pass.
+
+    tokens: [N, S_streams, T] -> logits [N, S_streams, T, vocab].
+    """
+    from repro.nn import transformer as T
+    from repro.nn.common import shard
+    import dataclasses as dc
+
+    N, S_str, Tlen = tokens.shape
+    emb = jnp.take(params["embed"].astype(cfg.activ_dtype),
+                   tokens.reshape(N * S_str, Tlen), axis=0)
+    emb = emb.reshape(N, S_str, Tlen, cfg.d_model)
+    sup = superpose_embeddings(emb, keys, blocks).astype(cfg.activ_dtype)
+
+    # run the backbone body on the superposed sequence (skip its own embed)
+    x = shard(sup, "batch", "seq", "embed_act")
+    positions = jnp.broadcast_to(jnp.arange(Tlen)[None], (N, Tlen))
+
+    def period_body(x, period_params):
+        for bi, kind in enumerate(cfg.block_pattern):
+            x, _, _ = T._apply_block(period_params[bi], kind, cfg, x,
+                                     positions, None, None, False)
+        return x, None
+
+    x, _ = jax.lax.scan(period_body, x, params["blocks"])
+    x = T._norm(cfg, params["final_ln"], x)
+    per_stream = unbind_hidden(x, keys, blocks)  # [N, S_str, T, d]
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    return per_stream.astype(cfg.activ_dtype) @ head.astype(cfg.activ_dtype)

@@ -1,0 +1,115 @@
+"""Probabilistic rule abduction and execution (PrAE/NVSA-style, Sec. II-D).
+
+Operates on per-panel attribute *value distributions* (soft beliefs produced
+by the factorizer or the CNN head).  For every attribute the engine scores
+each candidate rule by the probability that the two complete rows of the RPM
+grid are consistent with it (abduction), then executes the posterior-weighted
+rules on the incomplete row to predict the missing panel's attribute
+distribution (execution), and finally ranks the 8 candidate panels.
+
+Note the kernel connection: *arithmetic* rules over modular attribute values
+are exactly circular convolution / correlation of probability vectors — the
+same op CogSys's BS dataflow accelerates for VSA binding, which is why the
+symbolic stage of these workloads is circconv-dominated (paper Fig. 6).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+RULES = ("constant", "progression_p1", "progression_m1", "arithmetic_plus",
+         "arithmetic_minus", "distribute_three")
+NUM_RULES = len(RULES)
+
+
+def _circconv_p(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Circular convolution of probability vectors (arithmetic_plus execution)."""
+    n = p.shape[-1]
+    fp = jnp.fft.rfft(p, axis=-1) * jnp.fft.rfft(q, axis=-1)
+    out = jnp.fft.irfft(fp, n=n, axis=-1)
+    return jnp.clip(out, 0.0, None)
+
+
+def _circcorr_p(p: jax.Array, q: jax.Array) -> jax.Array:
+    """Circular correlation: distribution of (a - b) mod n."""
+    n = p.shape[-1]
+    fp = jnp.fft.rfft(p, axis=-1) * jnp.conj(jnp.fft.rfft(q, axis=-1))
+    out = jnp.fft.irfft(fp, n=n, axis=-1)
+    return jnp.clip(out, 0.0, None)
+
+
+def _shift(p: jax.Array, k: int) -> jax.Array:
+    return jnp.roll(p, k, axis=-1)
+
+
+def _row_rule_score(p1, p2, p3) -> jax.Array:
+    """Probability each rule explains one complete row. p*: [..., n] -> [..., R-1]."""
+    s_const = jnp.sum(p1 * p2 * p3, axis=-1)
+    s_prog_p = jnp.sum(p1 * _shift(p2, -1) * _shift(p3, -2), axis=-1)
+    s_prog_m = jnp.sum(p1 * _shift(p2, 1) * _shift(p3, 2), axis=-1)
+    s_arith_p = jnp.sum(_circconv_p(p1, p2) * p3, axis=-1)
+    s_arith_m = jnp.sum(_circcorr_p(p1, p2) * p3, axis=-1)
+    return jnp.stack([s_const, s_prog_p, s_prog_m, s_arith_p, s_arith_m], axis=-1)
+
+
+def abduce_rules(grid_p: jax.Array) -> jax.Array:
+    """Rule posterior per attribute from the two complete rows.
+
+    grid_p: [..., 3, 3, n] panel attribute distributions -> [..., R] posterior.
+    """
+    s_row0 = _row_rule_score(grid_p[..., 0, 0, :], grid_p[..., 0, 1, :], grid_p[..., 0, 2, :])
+    s_row1 = _row_rule_score(grid_p[..., 1, 0, :], grid_p[..., 1, 1, :], grid_p[..., 1, 2, :])
+    score = s_row0 * s_row1  # independent rows, shared rule
+    # distribute_three is a cross-row constraint: both rows carry the *same*
+    # set of three distinct values (in some order).
+    set0 = jnp.mean(grid_p[..., 0, :, :], axis=-2)  # [..., n] row-0 value set
+    set1 = jnp.mean(grid_p[..., 1, :, :], axis=-2)
+    distinct0 = 1 - jnp.sum(grid_p[..., 0, 0, :] * grid_p[..., 0, 1, :], axis=-1)
+    distinct1 = 1 - jnp.sum(grid_p[..., 1, 0, :] * grid_p[..., 1, 1, :], axis=-1)
+    set_match = jnp.sum(jnp.minimum(set0, set1) * 3.0, axis=-1) / 3.0
+    s_dist3 = (set_match ** 3) * distinct0 * distinct1
+    score = jnp.concatenate([score, s_dist3[..., None]], axis=-1)
+    return score / (jnp.sum(score, axis=-1, keepdims=True) + 1e-12)
+
+
+def execute_rules(grid_p: jax.Array, rule_post: jax.Array) -> jax.Array:
+    """Posterior-weighted prediction of panel (2,2)'s attribute distribution.
+
+    grid_p: [..., 3, 3, n]; rule_post: [..., R] -> [..., n].
+    """
+    p7, p8 = grid_p[..., 2, 0, :], grid_p[..., 2, 1, :]
+    preds = []
+    preds.append((p7 + p8) / 2.0)  # constant
+    preds.append(_shift(p8, 1))  # progression +1: p9(v) = p8(v-1)
+    preds.append(_shift(p8, -1))  # progression -1: p9(v) = p8(v+1)
+    preds.append(_circconv_p(p7, p8))  # arithmetic_plus: v3 = v1 + v2
+    preds.append(_circcorr_p(p7, p8))  # arithmetic_minus: v3 = v1 - v2
+    # distribute_three: the set from complete rows minus the two seen values.
+    srow = (grid_p[..., 0, 0, :] + grid_p[..., 0, 1, :] + grid_p[..., 0, 2, :]) / 3.0
+    d3 = jnp.clip(srow * (1 - p7) * (1 - p8), 0.0, None)
+    preds.append(d3 / (jnp.sum(d3, axis=-1, keepdims=True) + 1e-12))
+    pred = jnp.einsum("...r,r...n->...n", rule_post, jnp.stack(preds))
+    return pred / (jnp.sum(pred, axis=-1, keepdims=True) + 1e-12)
+
+
+def score_candidates(pred_p: jax.Array, cand_values: jax.Array) -> jax.Array:
+    """Log-likelihood of each candidate's attribute value under the prediction.
+
+    pred_p: [..., n]; cand_values: [..., 8] int -> [..., 8] log-probs.
+    """
+    probs = jnp.take_along_axis(pred_p, cand_values, axis=-1)
+    return jnp.log(probs + 1e-9)
+
+
+def solve_attribute_grids(grids: dict, candidates: dict) -> jax.Array:
+    """End-to-end symbolic solve from soft grids.
+
+    grids: attr -> [batch, 3, 3, n_a] distributions (panel (2,2) ignored);
+    candidates: attr -> [batch, 8] int values.  Returns [batch] answer index.
+    """
+    total = 0.0
+    for a, grid_p in grids.items():
+        post = abduce_rules(grid_p)
+        pred = execute_rules(grid_p, post)
+        total = total + score_candidates(pred, candidates[a])
+    return jnp.argmax(total, axis=-1)

@@ -1,0 +1,213 @@
+"""Vector-Symbolic Architecture (VSA) algebra with block-code binding.
+
+CogSys (Sec. II-C) builds on VSAs whose key operation is *block-wise circular
+convolution*: a D-dimensional hypervector is viewed as ``B`` blocks of ``L``
+lanes (D = B*L) and binding convolves each block circularly.  Two familiar
+algebras are corner cases:
+
+  * ``L == 1``  -> MAP / Hadamard binding (element-wise multiply),
+  * ``B == 1``  -> HRR (full circular convolution over all D lanes).
+
+Vectors are stored *flat* ``[..., D]``; the :class:`VSAConfig` carries the
+block structure.  All ops are pure jnp and jit-friendly.  Three execution
+paths exist for binding:
+
+  * ``impl='fft'``    : O(D log L) via per-block FFT (XLA-native, default),
+  * ``impl='direct'`` : O(D*L) circulant contraction (oracle; small L),
+  * ``impl='pallas'`` : the TPU kernel in :mod:`repro.kernels.circconv`
+                        (bubble-streaming adaptation, O(D) HBM footprint).
+
+"Unitary" vectors (unit-magnitude block spectra) make circular correlation an
+*exact* inverse of binding, which is what makes the CogSys factorizer converge
+quickly; :func:`random_unitary` draws them.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+Impl = Literal["fft", "direct", "pallas"]
+
+
+@dataclasses.dataclass(frozen=True)
+class VSAConfig:
+    """Block-code VSA configuration.
+
+    Attributes:
+      dim:    total hypervector dimensionality D.
+      blocks: number of independent circular-convolution blocks B.
+      impl:   default binding implementation.
+    """
+
+    dim: int = 1024
+    blocks: int = 1
+    impl: Impl = "fft"
+
+    def __post_init__(self):
+        if self.dim % self.blocks != 0:
+            raise ValueError(f"dim={self.dim} not divisible by blocks={self.blocks}")
+
+    @property
+    def lanes(self) -> int:
+        """Block length L."""
+        return self.dim // self.blocks
+
+    def blockify(self, x: jax.Array) -> jax.Array:
+        return x.reshape(*x.shape[:-1], self.blocks, self.lanes)
+
+    def flatten(self, x: jax.Array) -> jax.Array:
+        return x.reshape(*x.shape[:-2], self.dim)
+
+
+# ---------------------------------------------------------------------------
+# Random hypervectors
+# ---------------------------------------------------------------------------
+
+def random_normal(key: jax.Array, shape, cfg: VSAConfig, dtype=jnp.float32) -> jax.Array:
+    """I.i.d. Gaussian hypervectors with E[||x||^2] = 1 (HRR convention)."""
+    full = tuple(shape) + (cfg.dim,)
+    return jax.random.normal(key, full, dtype) / jnp.sqrt(jnp.asarray(cfg.dim, dtype))
+
+
+def random_bipolar(key: jax.Array, shape, cfg: VSAConfig, dtype=jnp.float32) -> jax.Array:
+    """Dense bipolar (+-1) hypervectors (MAP algebra; NVSA-style codebooks).
+
+    With ``cfg.blocks == cfg.dim`` (L=1) binding degenerates to the Hadamard
+    product and these are self-inverse: unbind == bind.
+    """
+    full = tuple(shape) + (cfg.dim,)
+    return jnp.where(jax.random.bernoulli(key, shape=full), 1.0, -1.0).astype(dtype)
+
+
+def random_unitary(key: jax.Array, shape, cfg: VSAConfig, dtype=jnp.float32) -> jax.Array:
+    """Real hypervectors whose per-block DFT has unit magnitude everywhere.
+
+    For such vectors binding with the involution is an exact unbind and every
+    block has constant L2 norm 1 (after the 1/sqrt(D) scaling below the full
+    vector has norm 1), giving the quasi-orthogonality the factorizer relies
+    on (paper Sec. IV-A).
+    """
+    L = cfg.lanes
+    full = tuple(shape) + (cfg.blocks, L)
+    nfreq = L // 2 + 1
+    k_ph, k_sgn0, k_sgnN = jax.random.split(key, 3)
+    theta = jax.random.uniform(k_ph, full[:-1] + (nfreq,), minval=0.0, maxval=2 * jnp.pi)
+    spec = jnp.exp(1j * theta)
+    # DC (and Nyquist when L is even) bins of a real signal must be real: +/-1.
+    sgn0 = jnp.where(jax.random.bernoulli(k_sgn0, shape=full[:-1]), 1.0, -1.0)
+    spec = spec.at[..., 0].set(sgn0.astype(spec.dtype))
+    if L % 2 == 0:
+        sgnN = jnp.where(jax.random.bernoulli(k_sgnN, shape=full[:-1]), 1.0, -1.0)
+        spec = spec.at[..., nfreq - 1].set(sgnN.astype(spec.dtype))
+    x = jnp.fft.irfft(spec, n=L, axis=-1)
+    # Parseval: sum_n x[n]^2 = (1/L) * sum_k |X[k]|^2 = 1 for a unit-magnitude
+    # (conjugate-symmetric) spectrum, so each block already has L2 norm 1.
+    x = x / jnp.sqrt(jnp.asarray(cfg.blocks, x.dtype))  # full-vector norm 1
+    return cfg.flatten(x).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Core algebra
+# ---------------------------------------------------------------------------
+
+def _bind_fft(xb: jax.Array, yb: jax.Array) -> jax.Array:
+    fx = jnp.fft.rfft(xb.astype(jnp.float32), axis=-1)
+    fy = jnp.fft.rfft(yb.astype(jnp.float32), axis=-1)
+    return jnp.fft.irfft(fx * fy, n=xb.shape[-1], axis=-1)
+
+
+def _bind_direct(xb: jax.Array, yb: jax.Array) -> jax.Array:
+    """Reference O(L^2) circulant contraction: c[n] = sum_k x[k] y[(n-k) mod L]."""
+    L = xb.shape[-1]
+    n = jnp.arange(L)
+    idx = (n[:, None] - n[None, :]) % L  # [n, k] -> (n - k) mod L
+    # y circulant: Y[n, k] = y[(n-k) mod L]
+    Yc = yb[..., idx]  # [..., L(n), L(k)]
+    return jnp.einsum("...k,...nk->...n", xb.astype(jnp.float32), Yc.astype(jnp.float32))
+
+
+def bind(x: jax.Array, y: jax.Array, cfg: VSAConfig, impl: Impl | None = None) -> jax.Array:
+    """Block-wise circular convolution binding. Shapes broadcast over leading dims."""
+    impl = impl or cfg.impl
+    xb, yb = cfg.blockify(x), cfg.blockify(y)
+    if impl == "fft":
+        out = _bind_fft(xb, yb)
+    elif impl == "direct":
+        out = _bind_direct(xb, yb)
+    elif impl == "pallas":
+        from repro.kernels.circconv import ops as cc_ops
+
+        out = cc_ops.block_circconv(xb, yb)
+    else:
+        raise ValueError(f"unknown impl {impl!r}")
+    return cfg.flatten(out).astype(x.dtype)
+
+
+def involution(x: jax.Array, cfg: VSAConfig) -> jax.Array:
+    """Per-block index reversal y[n] = x[(-n) mod L]; FFT(inv(x)) = conj(FFT(x))."""
+    xb = cfg.blockify(x)
+    inv = jnp.concatenate([xb[..., :1], xb[..., 1:][..., ::-1]], axis=-1)
+    return cfg.flatten(inv)
+
+
+def unbind(q: jax.Array, y: jax.Array, cfg: VSAConfig, impl: Impl | None = None) -> jax.Array:
+    """Circular correlation: recovers x from q = bind(x, y) (exact for unitary y)."""
+    return bind(q, involution(y, cfg), cfg, impl=impl)
+
+
+def bind_all(xs: jax.Array, cfg: VSAConfig) -> jax.Array:
+    """Bind along axis 0: bind(xs[0], bind(xs[1], ...)). Done in Fourier domain."""
+    if cfg.lanes == 1:  # MAP corner: binding is the Hadamard product
+        return jnp.prod(xs, axis=0)
+    xb = cfg.blockify(xs).astype(jnp.float32)
+    spec = jnp.prod(jnp.fft.rfft(xb, axis=-1), axis=0)
+    return cfg.flatten(jnp.fft.irfft(spec, n=cfg.lanes, axis=-1))
+
+
+def bundle(xs: jax.Array, axis: int = 0, normalize: bool = True) -> jax.Array:
+    """Superposition (elementwise sum), optionally L2-normalised."""
+    s = jnp.sum(xs, axis=axis)
+    if normalize:
+        s = s / (jnp.linalg.norm(s, axis=-1, keepdims=True) + 1e-9)
+    return s
+
+
+def similarity(x: jax.Array, y: jax.Array) -> jax.Array:
+    """Cosine similarity over the last axis (broadcasts leading dims)."""
+    num = jnp.sum(x * y, axis=-1)
+    den = jnp.linalg.norm(x, axis=-1) * jnp.linalg.norm(y, axis=-1) + 1e-9
+    return num / den
+
+
+def codebook_similarity(x: jax.Array, codebook: jax.Array) -> jax.Array:
+    """Similarity of x [..., D] against a codebook [M, D] -> [..., M].
+
+    This is the MXU-friendly matvec at the heart of factorizer Step 2; the
+    quantized Pallas variant lives in kernels/similarity.
+    """
+    xn = x / (jnp.linalg.norm(x, axis=-1, keepdims=True) + 1e-9)
+    cn = codebook / (jnp.linalg.norm(codebook, axis=-1, keepdims=True) + 1e-9)
+    return xn @ cn.T
+
+
+def normalize_sign(x: jax.Array) -> jax.Array:
+    """Bipolar saturation sign(x) with sign(0) := +1 (resonator nonlinearity)."""
+    return jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+
+
+def normalize_unitary(x: jax.Array, cfg: VSAConfig) -> jax.Array:
+    """Project each block's spectrum back onto unit magnitude (phasor projection).
+
+    Used after the factorizer's weighted projection so estimates stay unitary;
+    this is the real-vector analogue of NVSA's phasor normalisation.
+    """
+    xb = cfg.blockify(x).astype(jnp.float32)
+    spec = jnp.fft.rfft(xb, axis=-1)
+    spec = spec / (jnp.abs(spec) + 1e-9)
+    out = jnp.fft.irfft(spec, n=cfg.lanes, axis=-1)
+    out = out / jnp.sqrt(jnp.asarray(cfg.blocks, out.dtype))
+    return cfg.flatten(out).astype(x.dtype)

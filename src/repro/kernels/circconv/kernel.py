@@ -1,0 +1,122 @@
+"""Pallas TPU kernel: bubble-streaming circular convolution, adapted to VMEM.
+
+CogSys's BS dataflow (paper Sec. V-C) streams vector B through inter-PE
+"bubble" registers so the circulant operand never exists in memory: HBM
+traffic stays O(d) per convolution instead of the O(d^2) a TPU-like systolic
+array pays when it materialises the circulant matrix for a GEMV.
+
+TPUs have no inter-PE streaming registers, so the adaptation keeps the same
+*property* with a different mechanism: both O(d) operand vectors of a row are
+pinned in VMEM and the circular shifts are synthesised in-register by slicing
+a doubled copy of ``y`` (shift k == contiguous window [L-k, 2L-k)).  The MAC
+loop runs on the VPU over a tile of R independent rows, which is CogSys's
+column-wise parallelism (CWP) mapped onto the 8x128 vector lanes; the Pallas
+grid over row-tiles is cell-wise parallelism (ScWP).
+
+Latency/footprint model (mirrors the paper's cycle analysis): per row-tile the
+kernel reads 2*R*L elements, writes R*L, and performs R*L^2 MACs -> arithmetic
+intensity L/3 vs the O(1) of a GEMV formulation.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _circconv_kernel(x_ref, y_ref, o_ref, *, L: int, acc_dtype):
+    """One row-tile: o[r, n] = sum_k x[r, k] * y[r, (n - k) mod L]."""
+    x = x_ref[...].astype(acc_dtype)  # [R, L]
+    y = y_ref[...].astype(acc_dtype)  # [R, L]
+    R = x.shape[0]
+    ydbl = jnp.concatenate([y, y], axis=-1)  # [R, 2L] doubled copy: shift via slice
+
+    def body(k, acc):
+        # window [L-k, 2L-k) of ydbl == roll(y, +k): ydbl[L-k+n] = y[(n-k) mod L]
+        ysh = jax.lax.dynamic_slice(ydbl, (0, L - k), (R, L))
+        xk = jax.lax.dynamic_slice(x, (0, k), (R, 1))  # stationary operand lane k
+        return acc + xk * ysh
+
+    acc = jax.lax.fori_loop(0, L, body, jnp.zeros((R, L), acc_dtype))
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _pick_row_tile(n_rows: int, L: int, itemsize: int, vmem_budget: int = 8 * 2**20) -> int:
+    """Rows per tile so x, y, ydbl, acc (~5 copies) fit the VMEM budget."""
+    per_row = 5 * L * max(itemsize, 4)
+    r = max(8, vmem_budget // max(per_row, 1))
+    r = 1 << (r.bit_length() - 1)  # round down to pow2 for clean grids
+    return int(min(r, max(8, n_rows), 512))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def circconv_rows(x: jax.Array, y: jax.Array, *, interpret: bool = False) -> jax.Array:
+    """Row-wise circular convolution via the BS-adapted Pallas kernel.
+
+    x, y: [N, L] -> [N, L] in x.dtype (fp32 accumulation).
+    """
+    N, L = x.shape
+    R = _pick_row_tile(N, L, x.dtype.itemsize)
+    pad = (-N) % R
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        y = jnp.pad(y, ((0, pad), (0, 0)))
+    Np = x.shape[0]
+    out = pl.pallas_call(
+        functools.partial(_circconv_kernel, L=L, acc_dtype=jnp.float32),
+        grid=(Np // R,),
+        in_specs=[
+            pl.BlockSpec((R, L), lambda i: (i, 0)),
+            pl.BlockSpec((R, L), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((R, L), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((Np, L), x.dtype),
+        interpret=interpret,
+    )(x, y)
+    return out[:N]
+
+
+def _circconv_mxu_kernel(x_ref, y_ref, o_ref, *, L: int):
+    """MXU variant for a single long row: build circulant tiles in VMEM.
+
+    Grid: (out_tiles,). For output tile j, o[jT:(j+1)T] = sum over k-tiles of
+    x_tile @ C where C[k, n] = y[(n - k) mod L] is synthesised from the O(L)
+    vector by index arithmetic (never touches HBM).
+    """
+    j = pl.program_id(0)
+    T = o_ref.shape[-1]
+    x = x_ref[...].astype(jnp.float32)  # [1, L] full stationary vector
+    y = y_ref[...].astype(jnp.float32)  # [1, L]
+    n_idx = j * T + jax.lax.broadcasted_iota(jnp.int32, (L, T), 1)
+    k_idx = jax.lax.broadcasted_iota(jnp.int32, (L, T), 0)
+    gather_idx = (n_idx - k_idx) % L  # circulant column tile [L(k), T(n)]
+    C = jnp.take_along_axis(jnp.broadcast_to(y, (L, L)), gather_idx % L, axis=1)
+    # Wait-free: y broadcast [L, L] then gathered per (k, n). Contract on MXU:
+    o_ref[...] = (x @ C).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile"))
+def circconv_single_mxu(x: jax.Array, y: jax.Array, *, tile: int = 256,
+                        interpret: bool = False) -> jax.Array:
+    """Circular convolution of two 1-D vectors on the MXU (circulant-in-VMEM).
+
+    Suited to the B=1 HRR corner (one long convolution) where row-parallelism
+    is absent; used by the hillclimb pass for large-d single binds.
+    """
+    (L,) = x.shape
+    pad = (-L) % tile
+    Lp = L + pad
+    out = pl.pallas_call(
+        functools.partial(_circconv_mxu_kernel, L=L),
+        grid=(Lp // tile,),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda j: (0, 0)),
+            pl.BlockSpec((1, L), lambda j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((1, Lp), x.dtype),
+        interpret=interpret,
+    )(x[None], y[None])
+    return out[0, :L]

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for block-wise circular convolution / correlation.
+
+``c[r, n] = sum_k x[r, k] * y[r, (n - k) mod L]`` for every independent row r.
+O(L^2) per row; used only for validation and tiny problem sizes.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def circconv_rows_ref(x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise circular convolution. x, y: [N, L] -> [N, L] (float32 accum)."""
+    L = x.shape[-1]
+    n = jnp.arange(L)
+    idx = (n[:, None] - n[None, :]) % L  # [n, k]
+    yc = y[..., idx]  # [N, L(n), L(k)]
+    return jnp.einsum("nk,nok->no", x.astype(jnp.float32), yc.astype(jnp.float32))
+
+
+def circcorr_rows_ref(q: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """Row-wise circular correlation: c[r, n] = sum_k q[r, (n + k) mod L] y[r, k]."""
+    L = q.shape[-1]
+    inv = jnp.concatenate([y[..., :1], y[..., 1:][..., ::-1]], axis=-1)
+    return circconv_rows_ref(q, inv)
+
+
+def block_circconv_ref(xb: jnp.ndarray, yb: jnp.ndarray) -> jnp.ndarray:
+    """Blocked layout oracle. xb, yb: [..., B, L] -> [..., B, L]."""
+    lead = xb.shape[:-1]
+    L = xb.shape[-1]
+    out = circconv_rows_ref(xb.reshape(-1, L), yb.reshape(-1, L))
+    return out.reshape(*lead, L)

@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused resonator iteration (bipolar MAP algebra).
+
+The factorizer's inner loop reads each codebook X[f] twice per iteration —
+once for the similarity matvec, once for the projection.  This kernel keeps
+the whole per-factor codebook resident in VMEM (M x D <= a few hundred KB at
+workload scale) and runs unbind -> similarity -> activation -> projection ->
+sign in ONE invocation: the codebook's HBM traffic halves and the unbound
+estimate / score vector never exist in HBM at all.
+
+Grid: one program per factor.  The all-factor estimate product (a [D]
+vector) is precomputed outside (it needs cross-factor data the grid cannot
+share) — everything per-factor is fused.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _step_kernel(q_ref, prod_ref, est_ref, cb_ref, alpha_ref, new_est_ref,
+                 *, use_abs: bool):
+    q = q_ref[...].astype(jnp.float32)  # [1, D]
+    prod = prod_ref[...].astype(jnp.float32)  # [1, D]
+    est_f = est_ref[...].astype(jnp.float32)  # [1, D]
+    X = cb_ref[...][0].astype(jnp.float32)  # [M, D] — resident for BOTH matmuls
+    u = q * prod * est_f  # unbind (est^2 == 1)             [1, D]
+    alpha = jnp.dot(X, u[0])  # similarity                   [M]
+    w = jnp.abs(alpha) if use_abs else alpha
+    proj = jnp.dot(w, X)  # projection                       [D]
+    new_est_ref[...] = jnp.where(proj >= 0, 1.0, -1.0)[None].astype(
+        new_est_ref.dtype)
+    alpha_ref[...] = alpha[None].astype(alpha_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "interpret"))
+def resonator_step(q: jax.Array, est: jax.Array, codebooks: jax.Array,
+                   *, activation: str = "identity",
+                   interpret: bool = False):
+    """q: [D]; est: [F, D] bipolar; codebooks: [F, M, D] ->
+    (alpha [F, M], new_est [F, D])."""
+    F, M, D = codebooks.shape
+    prod = jnp.prod(est, axis=0, keepdims=True)  # [1, D] cross-factor input
+    qb = jnp.broadcast_to(q[None], (F, D))
+    prodb = jnp.broadcast_to(prod, (F, D))
+    alpha, new_est = pl.pallas_call(
+        functools.partial(_step_kernel, use_abs=activation == "abs"),
+        grid=(F,),
+        in_specs=[
+            pl.BlockSpec((1, D), lambda f: (f, 0)),  # q (replicated rows)
+            pl.BlockSpec((1, D), lambda f: (f, 0)),  # prod
+            pl.BlockSpec((1, D), lambda f: (f, 0)),  # est_f
+            pl.BlockSpec((1, M, D), lambda f: (f, 0, 0)),  # codebook f
+        ],
+        out_specs=[
+            pl.BlockSpec((1, M), lambda f: (f, 0)),
+            pl.BlockSpec((1, D), lambda f: (f, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((F, M), jnp.float32),
+            jax.ShapeDtypeStruct((F, D), est.dtype),
+        ],
+        interpret=interpret,
+    )(qb, prodb, est, codebooks)
+    return alpha, new_est

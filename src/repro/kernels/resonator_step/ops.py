@@ -1,0 +1,20 @@
+"""Public wrapper for the fused resonator step (backend dispatch)."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.resonator_step import kernel as _k
+from repro.kernels.resonator_step import ref as _ref
+
+
+def fused_resonator_step(q, est, codebooks, activation: str = "identity"):
+    """One fused Jacobi resonator sweep (bipolar algebra).
+
+    Halves per-iteration codebook HBM traffic vs separate similarity +
+    projection matmuls; see kernels/resonator_step/kernel.py.
+    """
+    return _k.resonator_step(q, est, codebooks, activation=activation,
+                             interpret=jax.default_backend() != "tpu")
+
+
+resonator_step_ref = _ref.resonator_step_ref

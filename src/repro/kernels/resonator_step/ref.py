@@ -1,0 +1,26 @@
+"""Oracle for the fused resonator step (bipolar algebra).
+
+One factorizer iteration for factor f (paper Fig. 8 steps 1-3, MAP algebra):
+    u      = q * prod(est, axis=0) * est[f]        (unbind; est in {-1, +1})
+    alpha  = X[f] @ u                              (similarity)
+    w      = act(alpha)                            (identity | abs)
+    est'_f = sign(w @ X[f])                        (projection + saturation)
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def resonator_step_ref(q, est, codebooks, activation: str = "identity"):
+    """q: [D]; est: [F, D] bipolar; codebooks: [F, M, D].
+
+    Returns (alpha [F, M], new_est [F, D]) — the Gauss-Jacobi sweep (all
+    factors from the same snapshot; the fused kernel parallelises factors).
+    """
+    prod = jnp.prod(est, axis=0)  # [D]
+    u = q[None] * prod[None] * est  # [F, D]
+    alpha = jnp.einsum("fd,fmd->fm", u, codebooks)
+    w = jnp.abs(alpha) if activation == "abs" else alpha
+    proj = jnp.einsum("fm,fmd->fd", w, codebooks)
+    new_est = jnp.where(proj >= 0, 1.0, -1.0).astype(est.dtype)
+    return alpha, new_est

@@ -1,0 +1,10 @@
+"""Oracle for the fused int8 codebook similarity search (factorizer Step 2)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def similarity_int8_ref(q: jnp.ndarray, w_int8: jnp.ndarray, w_scale: jnp.ndarray) -> jnp.ndarray:
+    """q: [N, D] fp32; w_int8: [M, D] int8; w_scale: [M, 1] fp32 -> [N, M] fp32."""
+    wf = w_int8.astype(jnp.float32) * w_scale
+    return q.astype(jnp.float32) @ wf.T

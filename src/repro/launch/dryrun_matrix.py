@@ -1,0 +1,72 @@
+"""Run the full (arch x shape x mesh) dry-run matrix, one subprocess per cell.
+
+Process isolation keeps one cell's compile memory / crash from poisoning the
+rest, and lets a wall-clock budget apply per cell.  Results aggregate into
+artifacts/dryrun/matrix.json; EXPERIMENTS.md §Dry-run / §Roofline read it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "..", ".."))
+OUT_DIR = os.path.join(ROOT, "artifacts", "dryrun")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=int, default=900)
+    ap.add_argument("--only-failed", action="store_true")
+    args = ap.parse_args()
+    from repro.configs.common import SHAPES
+    from repro.configs.registry import ARCHS
+
+    os.makedirs(OUT_DIR, exist_ok=True)
+    matrix_path = os.path.join(OUT_DIR, "matrix.json")
+    results = {}
+    if os.path.exists(matrix_path):
+        results = {tuple(k.split("|")): v for k, v in json.load(open(matrix_path)).items()}
+
+    cells = [(a, s, mp) for a in ARCHS for s in SHAPES for mp in (False, True)]
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    for aid, shp, mp in cells:
+        key = (aid, shp, "2x16x16" if mp else "16x16")
+        if args.only_failed and key in results and \
+                "error" not in results[key] and "timeout" not in results[key]:
+            continue
+        cell_out = os.path.join(OUT_DIR, f"cell_{aid}_{shp}_{key[2]}.json")
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--arch", aid,
+               "--shape", shp, "--out", cell_out] + (["--multipod"] if mp else [])
+        t0 = time.time()
+        try:
+            proc = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                                  timeout=args.timeout)
+            cell = json.load(open(cell_out))[0] if os.path.exists(cell_out) else \
+                {"error": proc.stderr[-800:]}
+        except subprocess.TimeoutExpired:
+            cell = {"arch": aid, "shape": shp, "mesh": key[2],
+                    "timeout": args.timeout}
+        except Exception as e:  # noqa: BLE001
+            cell = {"arch": aid, "shape": shp, "mesh": key[2],
+                    "error": f"{type(e).__name__}: {e}"}
+        cell["wall_s"] = round(time.time() - t0, 1)
+        results[key] = cell
+        status = "SKIP" if "skipped" in cell else (
+            "FAIL" if ("error" in cell or "timeout" in cell) else "OK")
+        print(f"[{status}] {aid} {shp} {key[2]} ({cell['wall_s']}s)", flush=True)
+        with open(matrix_path, "w") as f:
+            json.dump({"|".join(k): v for k, v in results.items()}, f, indent=1,
+                      default=str)
+    n_ok = sum(1 for v in results.values()
+               if "error" not in v and "timeout" not in v and "skipped" not in v)
+    n_skip = sum(1 for v in results.values() if "skipped" in v)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {len(results)-n_ok-n_skip} failed")
+
+
+if __name__ == "__main__":
+    main()

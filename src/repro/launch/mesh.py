@@ -1,0 +1,33 @@
+"""Production mesh construction (single-pod 16x16, multi-pod 2x16x16).
+
+A FUNCTION, not a module constant — importing this module must never touch
+jax device state (smoke tests see 1 device; only dryrun.py forces 512).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import os
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    override = os.environ.get("REPRO_MESH")  # e.g. "32x8" (hillclimb A/B)
+    if override and not multi_pod:
+        shape = tuple(int(x) for x in override.split("x"))
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(data: int = 4, model: int = 2):
+    """Small mesh over host CPU devices for distribution tests."""
+    n = len(jax.devices())
+    data = min(data, max(1, n // model))
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+
+# TPU v5e constants for the roofline (per chip).
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link

@@ -1,0 +1,207 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds:
+
+    compute    = HLO_FLOPs / (chips * 197e12)
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = collective_bytes / (chips * 50e9)
+
+HLO_FLOPs / bytes come from compiled.cost_analysis().  collective_bytes is
+parsed from the optimized HLO: every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op's *operand* sizes are
+summed (a two-pass parse builds the %name -> shape symbol table first).
+MODEL_FLOPS = 6*N*D (dense train) / 6*N_active*D (MoE) with the 2*N*D
+forward-only variant recorded for serve cells.
+"""
+from __future__ import annotations
+
+import re
+
+import numpy as np
+
+from repro.launch import mesh as M
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# '%name = <type...> op(...)' — lazy type match up to the first 'word(' is the
+# op; robust to tuple types, layout annotations and /*index*/ comments.
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*?)\s*([\w\-]+)\(")
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of an HLO type string like 'bf16[8,128,1024]{2,1,0}' or a tuple."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*->.*\{\s*$")
+_CALLEE_RE = re.compile(r"(?:condition|body|to_apply|calls)=\{?%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str) -> dict:
+    """name -> list of body lines (flat one-level parse of the HLO module)."""
+    comps: dict = {}
+    cur, buf = None, []
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line.strip())
+            if m and line.rstrip().endswith("{"):
+                cur, buf = m.group(1), []
+        else:
+            if line.strip() == "}":
+                comps[cur] = buf
+                cur = None
+            else:
+                buf.append(line)
+    return comps
+
+
+def _line_collective(line: str, sym: dict):
+    m = _DEF_RE.match(line)
+    if not m or m.group(3) not in _COLLECTIVES:
+        return None
+    kind = m.group(3)
+    call = line[line.index(kind + "(") + len(kind) + 1:]
+    depth, args = 1, ""
+    for ch in call:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        args += ch
+    ops = re.findall(r"%?([\w.\-]+)", args.split("channel_id")[0])
+    b = sum(_shape_bytes(sym.get(o, "")) for o in ops if o in sym)
+    if b == 0:  # fallback: result size
+        b = _shape_bytes(m.group(2))
+    return kind, b
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum operand bytes per collective kind, MULTIPLIED by enclosing while-
+    loop trip counts.
+
+    XLA reports (and a naive scan reads) a loop body once, but a
+    scan-over-layers model executes its per-layer collectives L times.  We
+    split the module into computations, read each while's trip count from the
+    largest integer constant in its condition computation (scan lowers to a
+    `i < L` compare), and propagate multipliers through the call graph from
+    ENTRY.
+    """
+    comps = _split_computations(hlo_text)
+    # global symbol table (shapes) + per-computation direct costs and callees
+    sym: dict = {}
+    for lines in comps.values():
+        for line in lines:
+            m = _DEF_RE.match(line)
+            if m:
+                sym[m.group(1)] = m.group(2).strip()
+    direct: dict = {}
+    edges: dict = {}
+    trip_of_cond: dict = {}
+    for name, lines in comps.items():
+        d = []
+        e = []
+        for line in lines:
+            col = _line_collective(line, sym)
+            if col:
+                d.append(col)
+            if " while(" in line:
+                mcond = re.search(r"condition=\{?%?([\w.\-]+)", line)
+                mbody = re.search(r"body=\{?%?([\w.\-]+)", line)
+                if mcond and mbody:
+                    cond_lines = comps.get(mcond.group(1), [])
+                    consts = [int(c) for cl in cond_lines
+                              for c in _CONST_RE.findall(cl)]
+                    trip = max(consts) if consts else 1
+                    e.append((mbody.group(1), max(trip, 1)))
+                    continue
+            for callee in _CALLEE_RE.findall(line):
+                if callee in comps:
+                    e.append((callee, 1))
+        direct[name] = d
+        edges[name] = e
+
+    out = {k: 0.0 for k in _COLLECTIVES}
+    count = {k: 0 for k in _COLLECTIVES}
+
+    entry = None
+    for line in hlo_text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None or entry not in comps:  # fallback: flat sum
+        entry_list = list(comps)
+    else:
+        entry_list = [entry]
+
+    seen_stack = set()
+
+    def visit(name: str, mult: float):
+        if name in seen_stack:  # cycles shouldn't occur; guard anyway
+            return
+        seen_stack.add(name)
+        for kind, b in direct.get(name, []):
+            out[kind] += b * mult
+            count[kind] += 1
+        for callee, m in edges.get(name, []):
+            visit(callee, mult * m)
+        seen_stack.discard(name)
+
+    for e in entry_list:
+        visit(e, 1.0)
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    out["counts"] = count
+    return out
+
+
+def roofline_terms(flops: float, bytes_hbm: float, coll_bytes: float,
+                   chips: int) -> dict:
+    compute = flops / (chips * M.PEAK_FLOPS_BF16)
+    memory = bytes_hbm / (chips * M.HBM_BW)
+    collective = coll_bytes / (chips * M.ICI_BW)
+    terms = {"compute_s": compute, "memory_s": memory, "collective_s": collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    total = max(compute, memory, collective)
+    terms["roofline_fraction_compute"] = compute / total if total else 0.0
+    return terms
+
+
+def model_flops(n_params: int, n_active: int, tokens: int, kind: str) -> dict:
+    """Useful-FLOPs accounting. kind: train (6ND) or prefill/decode (2ND)."""
+    factor = 6.0 if kind == "train" else 2.0
+    return {
+        "model_flops_6nd": 6.0 * n_params * tokens,
+        "model_flops_active": factor * n_active * tokens,
+        "factor": factor,
+    }
+
+
+def summarize(cell: dict) -> str:
+    t = cell["terms"]
+    return (f"{cell['arch']:24s} {cell['shape']:12s} {cell['mesh']:9s} "
+            f"comp={t['compute_s']*1e3:9.3f}ms mem={t['memory_s']*1e3:9.3f}ms "
+            f"coll={t['collective_s']*1e3:9.3f}ms -> {t['bottleneck']:10s} "
+            f"useful={cell.get('useful_frac', float('nan')):6.1%}")

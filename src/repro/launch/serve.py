@@ -1,0 +1,94 @@
+"""Serving driver: batched prefill + decode with request slotting.
+
+The CogSys system-level insight (adSCH interleaving, Sec. VI) maps to LM
+serving as continuous batching: new requests are slotted into the fixed
+decode batch as old ones finish, so the heterogeneous prefill/decode kernels
+keep the array busy — the same utilization argument as Fig. 13b.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.registry import ARCHS
+from repro.nn import transformer as T
+
+
+class ServeEngine:
+    """Static-batch continuous batching over a shared KV cache."""
+
+    def __init__(self, cfg, params, batch_slots: int, max_len: int):
+        self.cfg, self.params = cfg, params
+        self.max_len = max_len
+        self.cache = T.init_cache(cfg, batch_slots, max_len)
+        self.slots = batch_slots
+        self.active = np.zeros(batch_slots, bool)
+        self.generated: list = [[] for _ in range(batch_slots)]
+        self._decode = jax.jit(lambda p, c, t: T.decode_step(p, cfg, c, t))
+
+    def add_request(self, slot: int, prompt: jnp.ndarray):
+        """Prefill a prompt into one slot by streaming tokens (simple path)."""
+        for t in range(prompt.shape[0]):
+            logits, self.cache = self._decode(
+                self.params, self.cache, jnp.broadcast_to(
+                    prompt[t], (self.slots, 1)).astype(jnp.int32))
+        self.active[slot] = True
+        return logits
+
+    def step(self, sampler="greedy", temperature=1.0, key=None):
+        """One decode step for the whole batch; returns sampled tokens."""
+        last = jnp.asarray([
+            self.generated[s][-1] if self.generated[s] else 0
+            for s in range(self.slots)], dtype=jnp.int32)[:, None]
+        logits, self.cache = self._decode(self.params, self.cache, last)
+        if sampler == "greedy":
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        else:
+            nxt = jax.random.categorical(key, logits[:, -1] / temperature)
+        for s in range(self.slots):
+            if self.active[s]:
+                self.generated[s].append(int(nxt[s]))
+        return nxt
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--gen", type=int, default=32)
+    args = ap.parse_args()
+    spec = ARCHS[args.arch]
+    cfg = spec.smoke() if args.smoke else spec.full()
+    key = jax.random.PRNGKey(0)
+    params, _ = T.init(key, cfg)
+    print(f"{cfg.name}: {T.param_count(params):,} params; "
+          f"serving batch={args.batch}")
+    eng = ServeEngine(cfg, params, args.batch, args.prompt_len + args.gen + 1)
+    prompt = jax.random.randint(key, (args.prompt_len,), 0, cfg.vocab)
+    t0 = time.perf_counter()
+    eng.add_request(0, prompt)
+    for s in range(args.batch):
+        eng.active[s] = True
+        eng.generated[s] = [int(prompt[-1])]
+    prefill_t = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(args.gen):
+        eng.step()
+    jax.block_until_ready(eng.cache)
+    dec_t = time.perf_counter() - t0
+    tps = args.batch * args.gen / dec_t
+    print(f"prefill {prefill_t*1e3:.1f}ms; decode {args.gen} steps x {args.batch} "
+          f"slots in {dec_t*1e3:.1f}ms -> {tps:.1f} tok/s")
+    print("sample:", eng.generated[0][:16])
+
+
+if __name__ == "__main__":
+    main()

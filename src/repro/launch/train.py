@@ -1,0 +1,109 @@
+"""Training driver: --arch <id> [--smoke] --steps N.
+
+Full configs target the production mesh (use dryrun.py for lowering on this
+CPU container); --smoke runs the reduced same-family config end-to-end on
+host devices with the real loop: optimizer + schedule per ArchSpec, gradient
+clipping, fault-tolerant checkpointing, straggler watchdog, resumable data.
+
+    PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b --smoke --steps 30
+"""
+from __future__ import annotations
+
+import argparse
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.registry import ARCHS
+from repro.data.tokens import TokenConfig, TokenDataset
+from repro.nn import transformer as T
+from repro.train import optimizer as optim
+from repro.train.loop import LoopConfig, run
+
+
+def build_train_step(cfg, spec, total_steps: int):
+    if spec.optimizer == "adafactor":
+        opt = optim.adafactor(1e-2)
+    else:
+        sched = optim.wsd_schedule(3e-4, max(total_steps // 20, 1), total_steps) \
+            if spec.schedule == "wsd" else \
+            optim.cosine_schedule(3e-4, max(total_steps // 20, 1), total_steps)
+        dt = jnp.bfloat16 if spec.opt_state_dtype == "bf16" else jnp.float32
+        opt = optim.adamw(sched, state_dtype=dt)
+
+    @jax.jit
+    def train_step(state, batch):
+        params, opt_state = state
+        (loss, metrics), grads = jax.value_and_grad(
+            T.loss_fn, has_aux=True)(params, cfg, batch)
+        grads, gnorm = optim.clip_by_global_norm(grads, 1.0)
+        params, opt_state = opt.update(grads, opt_state, params)
+        return (params, opt_state), {**metrics, "loss": loss, "grad_norm": gnorm}
+
+    return opt, train_step
+
+
+def batch_extras(cfg, batch, key):
+    b = dict(batch)
+    B, S = b["tokens"].shape
+    if cfg.mrope_sections is not None:
+        b["positions"] = jnp.broadcast_to(jnp.arange(S)[None, None], (B, 3, S)).astype(jnp.int32)
+        b["vision_embeds"] = jax.random.normal(
+            key, (B, cfg.vision_patches, cfg.d_model), jnp.bfloat16)
+    if cfg.encoder is not None:
+        b["encoder_frames"] = jax.random.normal(
+            key, (B, cfg.encoder.n_frames, cfg.encoder.d_model), jnp.bfloat16)
+    return b
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    spec = ARCHS[args.arch]
+    cfg = spec.smoke() if args.smoke else spec.full()
+    key = jax.random.PRNGKey(0)
+    params, _ = T.init(key, cfg)
+    print(f"{cfg.name}: {T.param_count(params):,} params")
+    opt, train_step = build_train_step(cfg, spec, args.steps)
+    state = (params, opt.init(params))
+    data = TokenDataset(TokenConfig(cfg.vocab, args.seq, args.batch))
+
+    class Wrapped:
+        """Adapt the token stream: jnp conversion + arch-specific extras."""
+
+        def __init__(self, ds):
+            self.ds = ds
+
+        def state(self):
+            return self.ds.state()
+
+        def restore(self, s):
+            self.ds.restore(s)
+
+        def __iter__(self):
+            k = jax.random.PRNGKey(1)
+            for b in self.ds:
+                yield batch_extras(cfg, {k2: jnp.asarray(v) for k2, v in b.items()}, k)
+
+    def hook(step, metrics, dt, slow):
+        flag = " STRAGGLER" if slow else ""
+        print(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+              f"ce={float(metrics['ce']):.4f} {dt*1e3:7.1f}ms{flag}", flush=True)
+
+    state, history = run(train_step, state, Wrapped(data),
+                         LoopConfig(total_steps=args.steps, log_every=5,
+                                    checkpoint_every=10, checkpoint_dir=args.ckpt_dir),
+                         metrics_hook=hook)
+    first, last = history[0][1]["ce"], history[-1][1]["ce"]
+    print(f"ce: {first:.4f} -> {last:.4f} ({'improved' if last < first else 'NO IMPROVEMENT'})")
+
+
+if __name__ == "__main__":
+    main()

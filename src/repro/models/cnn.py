@@ -1,0 +1,75 @@
+"""Small CNN perception frontend (the 'neuro' module of NVSA/PrAE/LVRF).
+
+Pure-JAX pytree module: `init` builds the parameter tree, `apply` runs the
+forward pass.  The head regresses a D-dimensional VSA query vector (NVSA
+trains its frontend to emit hypervectors whose factorisation yields the
+panel's attributes); an auxiliary classification head per attribute is used
+for supervised pre-training and the PrAE-style probability pipeline.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    channels: tuple = (32, 64, 128)
+    kernel: int = 3
+    head_hidden: int = 512  # MLP head: the query targets are ~300 arbitrary
+    # directions in D-dim space, which a linear map from a narrow GAP feature
+    # cannot span — the hidden layer provides the needed rank.
+    vsa_dim: int = 1024
+    attr_sizes: tuple = (5, 6, 10)  # type, size, color
+    img: int = 32
+
+
+def _conv(x, w, b, stride):
+    out = jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return out + b
+
+
+def init(key: jax.Array, cfg: CNNConfig) -> dict:
+    params = {}
+    c_in = 1
+    for i, c in enumerate(cfg.channels):
+        key, k1 = jax.random.split(key)
+        fan_in = cfg.kernel * cfg.kernel * c_in
+        params[f"conv{i}_w"] = jax.random.normal(
+            k1, (cfg.kernel, cfg.kernel, c_in, c)) * jnp.sqrt(2.0 / fan_in)
+        params[f"conv{i}_b"] = jnp.zeros((c,))
+        c_in = c
+    key, k1, k2 = jax.random.split(key, 3)
+    params["head_h_w"] = jax.random.normal(k2, (c_in, cfg.head_hidden)) * jnp.sqrt(2.0 / c_in)
+    params["head_h_b"] = jnp.zeros((cfg.head_hidden,))
+    params["head_vsa_w"] = jax.random.normal(
+        k1, (cfg.head_hidden, cfg.vsa_dim)) * jnp.sqrt(1.0 / cfg.head_hidden)
+    params["head_vsa_b"] = jnp.zeros((cfg.vsa_dim,))
+    for a, n in enumerate(cfg.attr_sizes):
+        key, k1 = jax.random.split(key)
+        params[f"head_attr{a}_w"] = jax.random.normal(k1, (c_in, n)) * jnp.sqrt(1.0 / c_in)
+        params[f"head_attr{a}_b"] = jnp.zeros((n,))
+    return params
+
+
+def apply(params: dict, images: jax.Array, cfg: CNNConfig) -> dict:
+    """images [N, H, W] -> {'query': [N, D], 'attr_logits': tuple of [N, n_a]}."""
+    x = images[..., None]  # NHWC
+    for i in range(len(cfg.channels)):
+        x = _conv(x, params[f"conv{i}_w"], params[f"conv{i}_b"], stride=2)
+        x = jax.nn.relu(x)
+    feat = jnp.mean(x, axis=(1, 2))  # global average pool [N, C]
+    hid = jax.nn.gelu(feat @ params["head_h_w"] + params["head_h_b"])
+    query = hid @ params["head_vsa_w"] + params["head_vsa_b"]
+    attr_logits = tuple(
+        feat @ params[f"head_attr{a}_w"] + params[f"head_attr{a}_b"]
+        for a in range(len(cfg.attr_sizes)))
+    return {"query": query, "attr_logits": attr_logits, "features": feat}
+
+
+def num_params(params: dict) -> int:
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

@@ -1,0 +1,93 @@
+"""MIMONet: computation in superposition (paper Sec. II-D, workload 2).
+
+Multiple inputs are bound to per-stream VSA keys, bundled into ONE vector,
+pushed through a single shared backbone, and the per-stream outputs recovered
+by unbinding — S-fold throughput from one forward pass at a graceful accuracy
+cost.  This is the CogSys technique that transfers directly to the assigned
+LM architectures (core/superposition.py wraps any backbone; examples/
+mimonet_lm.py demonstrates it on a reduced llama).
+
+Here the backbone is an MLP over panel images and the task is RAVEN
+attribute classification, mirroring MIMONet's CNN/Transformer setup at the
+scale this container trains end-to-end.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import vsa
+
+
+@dataclasses.dataclass(frozen=True)
+class MIMONetConfig:
+    vsa: vsa.VSAConfig = vsa.VSAConfig(dim=2048, blocks=8)
+    num_streams: int = 2  # S simultaneous inputs
+    img: int = 32
+    hidden: tuple = (2048, 2048)
+    attr_sizes: tuple = (5, 6, 10)
+
+
+def init(key: jax.Array, cfg: MIMONetConfig) -> dict:
+    params = {}
+    key, k_keys = jax.random.split(key)
+    # Per-stream binding keys (fixed, unitary so unbinding is exact).
+    params["stream_keys"] = vsa.random_unitary(k_keys, (cfg.num_streams,), cfg.vsa)
+    d_in = cfg.img * cfg.img
+    key, k = jax.random.split(key)
+    params["embed_w"] = jax.random.normal(k, (d_in, cfg.vsa.dim)) * jnp.sqrt(1.0 / d_in)
+    params["embed_b"] = jnp.zeros((cfg.vsa.dim,))
+    d = cfg.vsa.dim
+    for i, h in enumerate(cfg.hidden):
+        key, k = jax.random.split(key)
+        params[f"mlp{i}_w"] = jax.random.normal(k, (d, h)) * jnp.sqrt(2.0 / d)
+        params[f"mlp{i}_b"] = jnp.zeros((h,))
+        d = h
+    key, k = jax.random.split(key)
+    params["out_w"] = jax.random.normal(k, (d, cfg.vsa.dim)) * jnp.sqrt(1.0 / d)
+    params["out_b"] = jnp.zeros((cfg.vsa.dim,))
+    for a, n in enumerate(cfg.attr_sizes):
+        key, k = jax.random.split(key)
+        params[f"head{a}_w"] = jax.random.normal(k, (cfg.vsa.dim, n)) * jnp.sqrt(1.0 / cfg.vsa.dim)
+        params[f"head{a}_b"] = jnp.zeros((n,))
+    return params
+
+
+def _backbone(params, x, cfg: MIMONetConfig):
+    for i in range(len(cfg.hidden)):
+        x = jax.nn.gelu(x @ params[f"mlp{i}_w"] + params[f"mlp{i}_b"])
+    return x @ params["out_w"] + params["out_b"]
+
+
+def apply(params: dict, images: jax.Array, cfg: MIMONetConfig) -> tuple:
+    """images [N, S, H, W] -> per-stream attribute logits.
+
+    The S stream inputs of each item share ONE backbone pass.
+    Returns tuple over attributes of [N, S, n_a] logits.
+    """
+    N, S = images.shape[:2]
+    flat = images.reshape(N, S, -1)
+    emb = flat @ params["embed_w"] + params["embed_b"]  # [N, S, D]
+    keys = params["stream_keys"]  # [S, D]
+    bound = vsa.bind(emb, keys[None, :, :], cfg.vsa)  # [N, S, D]
+    sup = jnp.mean(bound, axis=1)  # superposition [N, D]
+    out = _backbone(params, sup, cfg)  # ONE pass for S inputs
+    unbound = vsa.unbind(out[:, None, :], keys[None, :, :], cfg.vsa)  # [N, S, D]
+    return tuple(
+        unbound @ params[f"head{a}_w"] + params[f"head{a}_b"]
+        for a in range(len(cfg.attr_sizes)))
+
+
+def loss_fn(params, batch, cfg: MIMONetConfig):
+    """batch: images [N, S, H, W]; labels tuple of [N, S]."""
+    logits = apply(params, batch["images"], cfg)
+    loss = 0.0
+    accs = {}
+    for a, name in enumerate(("type", "size", "color")):
+        logp = jax.nn.log_softmax(logits[a])
+        lbl = batch[name][..., None]
+        loss = loss - jnp.mean(jnp.take_along_axis(logp, lbl, axis=-1))
+        accs[name] = jnp.mean((jnp.argmax(logits[a], -1) == batch[name]).astype(jnp.float32))
+    return loss, accs

@@ -1,0 +1,223 @@
+"""NVSA: Neuro-Vector-Symbolic Architecture for RPM reasoning (paper Sec. II-D).
+
+Pipeline (Fig. 2): CNN perception emits a VSA *query vector* per panel (the
+product of its attribute atoms, in superposition); the CogSys factorizer
+decomposes it into per-attribute beliefs; probabilistic abduction infers the
+row rules; execution predicts the missing panel; candidates are ranked by
+VSA similarity.
+
+The `pipelined_solver` is the JAX analogue of adSCH interleaving (Fig. 13b):
+inside one jitted scan step, the CNN stage of task-batch *t* runs in the same
+XLA program as the symbolic stage of task-batch *t-1*, so the symbolic tail
+is hidden behind neural compute exactly as the hardware scheduler hides it
+behind the next batch's neural layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import factorizer as fz
+from repro.core import symbolic as sym
+from repro.core import vsa
+from repro.models import cnn
+
+ATTR_SIZES = (5, 6, 10)  # type, size, color
+MAX_M = max(ATTR_SIZES)
+
+
+@dataclasses.dataclass(frozen=True)
+class NVSAConfig:
+    # Block-code VSA (NVSA-style): binding = block-wise circular convolution,
+    # the kernel CogSys's BS dataflow accelerates.
+    vsa: vsa.VSAConfig = vsa.VSAConfig(dim=1024, blocks=4)
+    cnn: cnn.CNNConfig = cnn.CNNConfig(vsa_dim=1024, attr_sizes=ATTR_SIZES)
+    factorizer: fz.FactorizerConfig = None  # type: ignore[assignment]
+    belief_temp: float = 96.0  # sharpness of cosine -> belief softmax
+    # 'logits_bind': the frontend's VSA layer binds softmax-weighted attribute
+    # atoms into the product query (the binding structure is part of the
+    # network's output head, as in NVSA); 'head': a free-form D-dim regression
+    # head trained with cosine loss (lower query fidelity at this training
+    # budget — kept as the ablation path, see DESIGN.md).
+    query_mode: str = "logits_bind"
+
+    def __post_init__(self):
+        if self.factorizer is None:
+            object.__setattr__(self, "factorizer", fz.FactorizerConfig(
+                vsa=self.vsa, num_factors=len(ATTR_SIZES), codebook_size=MAX_M,
+                algebra="bipolar" if self.vsa.lanes == 1 else "unitary",
+                activation="identity" if self.vsa.lanes == 1 else "abs",
+                max_iters=60, noise_std=0.3, restart_every=20,
+                conv_threshold=0.55))
+
+
+def make_codebooks(key: jax.Array, cfg: NVSAConfig):
+    """Padded attribute codebooks [F, MAX_M, D] + validity mask [F, MAX_M]."""
+    cbs = fz.make_codebooks(key, cfg.factorizer)
+    mask = jnp.stack([jnp.arange(MAX_M) < n for n in ATTR_SIZES])
+    return cbs, mask
+
+
+def target_query(codebooks: jax.Array, attrs: jax.Array, cfg: NVSAConfig) -> jax.Array:
+    """Ground-truth product vector for supervision. attrs: [..., F] ints."""
+    flat = attrs.reshape(-1, attrs.shape[-1])
+    qs = jax.vmap(lambda a: fz.bind_combo(codebooks, a, cfg.vsa))(flat)
+    return qs.reshape(*attrs.shape[:-1], cfg.vsa.dim)
+
+
+# ---------------------------------------------------------------------------
+# Training the frontend (neural module)
+# ---------------------------------------------------------------------------
+
+def frontend_loss(params, batch, codebooks, cfg: NVSAConfig):
+    """Cosine regression to the target query vector + auxiliary attr CE."""
+    out = cnn.apply(params, batch["images"], cfg.cnn)
+    target = target_query(
+        codebooks,
+        jnp.stack([batch["type"], batch["size"], batch["color"]], axis=-1), cfg)
+    cos = vsa.similarity(out["query"], target)
+    loss = jnp.mean(1.0 - cos)
+    aux = 0.0
+    for a, name in enumerate(("type", "size", "color")):
+        logp = jax.nn.log_softmax(out["attr_logits"][a])
+        aux = aux + jnp.mean(-jnp.take_along_axis(logp, batch[name][:, None], 1))
+    metrics = {"cosine": jnp.mean(cos), "aux_ce": aux}
+    return loss + 0.3 * aux, metrics
+
+
+# ---------------------------------------------------------------------------
+# Inference: perceive -> factorize -> abduce -> execute -> select
+# ---------------------------------------------------------------------------
+
+def perceive(params, images: jax.Array, cfg: NVSAConfig,
+             codebooks: jax.Array | None = None) -> jax.Array:
+    """images [..., H, W] -> query vectors [..., D].
+
+    query_mode='logits_bind': the output layer binds the softmax-weighted
+    attribute atoms (the VSA structure is part of the head); 'head': the
+    free-form regression head.
+    """
+    flat = images.reshape(-1, *images.shape[-2:])
+    out = cnn.apply(params, flat, cfg.cnn)
+    if cfg.query_mode == "logits_bind" and codebooks is not None:
+        atoms = []
+        for a, n in enumerate(ATTR_SIZES):
+            p = jax.nn.softmax(out["attr_logits"][a], axis=-1)  # [N, n]
+            atoms.append(p @ codebooks[a, :n])  # expected atom [N, D]
+        q = vsa.bind_all(jnp.stack(atoms), cfg.vsa)
+    else:
+        q = out["query"]
+    return q.reshape(*images.shape[:-2], cfg.vsa.dim)
+
+
+def beliefs_from_queries(queries: jax.Array, codebooks, mask, key, cfg: NVSAConfig):
+    """Factorize query vectors [N, D] -> per-attribute beliefs + indices."""
+    res = fz.factorize_batch(queries, codebooks, key, cfg.factorizer, mask)
+    # Soft beliefs from the final similarity scores.  Atoms are unit-norm and
+    # unbinding is norm-preserving, so dividing by the query norm turns the
+    # raw dot products into cosines before the masked softmax.
+    qnorm = jnp.linalg.norm(queries, axis=-1)[:, None, None] + 1e-9
+    cos = res.scores / qnorm
+    beliefs = jax.nn.softmax(
+        jnp.where(mask[None], cfg.belief_temp * cos, -1e9), axis=-1)
+    return beliefs, res
+
+
+def solve(params, batch, codebooks, mask, key, cfg: NVSAConfig) -> dict:
+    """End-to-end RPM solve for a batch of 'center' tasks.
+
+    batch: images [B, 9, H, W], candidate_images [B, 8, H, W].
+    Returns answer predictions plus factorizer diagnostics.
+    """
+    B = batch["images"].shape[0]
+    ctx = perceive(params, batch["images"][:, :8], cfg, codebooks)  # [B, 8, D]
+    cand = perceive(params, batch["candidate_images"], cfg, codebooks)  # [B, 8, D]
+    k1, k2 = jax.random.split(key)
+    ctx_beliefs, ctx_res = beliefs_from_queries(
+        ctx.reshape(B * 8, -1), codebooks, mask, k1, cfg)
+    ctx_beliefs = ctx_beliefs.reshape(B, 8, len(ATTR_SIZES), MAX_M)
+
+    # Assemble per-attribute 3x3 grids (last panel belief unused -> uniform).
+    answers_total = jnp.zeros((B, 8))
+    grids = {}
+    for a, n in enumerate(ATTR_SIZES):
+        g = ctx_beliefs[:, :, a, :n]  # [B, 8, n]
+        g = g / (g.sum(-1, keepdims=True) + 1e-9)
+        pad = jnp.full((B, 1, n), 1.0 / n)
+        grids[a] = jnp.concatenate([g, pad], axis=1).reshape(B, 3, 3, n)
+    # Abduce + execute per attribute, score candidates in VSA space.
+    pred_atoms = []
+    for a, n in enumerate(ATTR_SIZES):
+        post = sym.abduce_rules(grids[a])
+        pred = sym.execute_rules(grids[a], post)  # [B, n]
+        # Expected atom under the predicted distribution.
+        atoms = codebooks[a, :n]  # [n, D]
+        pred_atoms.append(pred @ atoms)  # [B, D]
+    pred_q = vsa.bind_all(jnp.stack(pred_atoms), cfg.vsa)  # [B, D] predicted panel
+    sims = vsa.similarity(pred_q[:, None, :], cand)  # [B, 8]
+    answer = jnp.argmax(sims, axis=-1)
+    return {"answer": answer, "sims": sims,
+            "fact_iters": ctx_res.iterations.reshape(B, 8),
+            "fact_converged": ctx_res.converged.reshape(B, 8)}
+
+
+def accuracy(params, batch, codebooks, mask, key, cfg: NVSAConfig) -> jax.Array:
+    out = solve(params, batch, codebooks, mask, key, cfg)
+    return jnp.mean((out["answer"] == batch["answer"]).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# adSCH software analogue: two-stage pipelined solver
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("cfg",))
+def pipelined_solve_scan(params, image_stream, cand_stream, codebooks, mask,
+                         key, cfg: NVSAConfig):
+    """Process a stream of task batches with neural/symbolic overlap.
+
+    image_stream: [T, B, 9, H, W]; cand_stream: [T, B, 8, H, W].
+    Step t's carry holds batch t-1's query vectors, so the (memory-bound)
+    symbolic stage of t-1 and the (compute-bound) neural stage of t sit in
+    one XLA program — giving the compiler the same overlap freedom adSCH
+    exploits in hardware (Sec. VI-B), and on a mesh letting the symbolic
+    kernels shard onto otherwise-idle devices.
+    """
+    B = image_stream.shape[1]
+    D = cfg.vsa.dim
+
+    def stage_neural(imgs, cands):
+        return perceive(params, imgs[:, :8], cfg, codebooks), \
+            perceive(params, cands, cfg, codebooks)
+
+    def stage_symbolic(ctx, cand, k):
+        beliefs, res = beliefs_from_queries(ctx.reshape(B * 8, -1), codebooks, mask, k, cfg)
+        beliefs = beliefs.reshape(B, 8, len(ATTR_SIZES), MAX_M)
+        pred_atoms = []
+        for a, n in enumerate(ATTR_SIZES):
+            g = beliefs[:, :, a, :n]
+            g = g / (g.sum(-1, keepdims=True) + 1e-9)
+            pad = jnp.full((B, 1, n), 1.0 / n)
+            grid = jnp.concatenate([g, pad], axis=1).reshape(B, 3, 3, n)
+            post = sym.abduce_rules(grid)
+            pred = sym.execute_rules(grid, post)
+            pred_atoms.append(pred @ codebooks[a, :n])
+        pred_q = vsa.bind_all(jnp.stack(pred_atoms), cfg.vsa)
+        return jnp.argmax(vsa.similarity(pred_q[:, None, :], cand), axis=-1)
+
+    def step(carry, xs):
+        prev_ctx, prev_cand, k = carry
+        imgs, cands = xs
+        k, k_sym = jax.random.split(k)
+        ans_prev = stage_symbolic(prev_ctx, prev_cand, k_sym)  # symbolic(t-1)
+        ctx, cand = stage_neural(imgs, cands)  # neural(t) — same XLA step
+        return (ctx, cand, k), ans_prev
+
+    ctx0, cand0 = stage_neural(image_stream[0], cand_stream[0])
+    (ctx_l, cand_l, k), answers = jax.lax.scan(
+        step, (ctx0, cand0, key), (image_stream[1:], cand_stream[1:]))
+    k, k_last = jax.random.split(k)
+    last = stage_symbolic(ctx_l, cand_l, k_last)
+    return jnp.concatenate([answers, last[None]], axis=0)  # [T, B]

@@ -1,0 +1,47 @@
+"""PrAE: Probabilistic Abduction and Execution learner (paper workload 4).
+
+The VSA-free member of the paper's workload set: the CNN's attribute heads
+emit probability vectors directly and the symbolic engine (core/symbolic.py)
+abduces/executes on them — no hypervector bottleneck, no factorizer.  Its
+role in the paper (and here) is the contrast class: PrAE's symbolic stage is
+probability-tensor manipulation (still circconv-shaped for arithmetic rules)
+while NVSA routes everything through bound representations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import symbolic as sym
+from repro.data import raven
+from repro.models import cnn
+
+
+def perceive_probs(params, images: jax.Array, cfg: cnn.CNNConfig) -> list:
+    """images [..., H, W] -> per-attribute probability tensors [..., n_a]."""
+    flat = images.reshape(-1, *images.shape[-2:])
+    out = cnn.apply(params, flat, cfg)
+    return [jax.nn.softmax(l, axis=-1).reshape(*images.shape[:-2], -1)
+            for l in out["attr_logits"]]
+
+
+def solve(params, batch: dict, cfg: cnn.CNNConfig) -> jax.Array:
+    """End-to-end PrAE solve: probabilities -> abduction -> execution -> pick."""
+    B = batch["images"].shape[0]
+    ctx_p = perceive_probs(params, batch["images"][:, :8], cfg)  # per attr [B,8,n]
+    cand_p = perceive_probs(params, batch["candidate_images"], cfg)  # [B,8,n]
+    total = jnp.zeros((B, 8))
+    for a, name in enumerate(raven.ATTRS):
+        n = raven.ATTR_SIZES[name]
+        pad = jnp.full((B, 1, n), 1.0 / n)
+        grid = jnp.concatenate([ctx_p[a], pad], axis=1).reshape(B, 3, 3, n)
+        post = sym.abduce_rules(grid)
+        pred = sym.execute_rules(grid, post)  # [B, n]
+        # score candidates by the expected probability of their perceived value
+        total = total + jnp.log(
+            jnp.einsum("bn,bcn->bc", pred, cand_p[a]) + 1e-9)
+    return jnp.argmax(total, axis=-1)
+
+
+def accuracy(params, batch: dict, cfg: cnn.CNNConfig) -> jax.Array:
+    return jnp.mean((solve(params, batch, cfg) == batch["answer"]).astype(jnp.float32))

@@ -1,0 +1,104 @@
+"""Logical-axis sharding plumbing for the NN substrate.
+
+Weights and activations carry *logical* axis names ("batch", "embed",
+"heads", "mlp", "vocab", "experts", "seq", ...) which a rules table maps to
+mesh axes.  `shard(x, names)` applies a with_sharding_constraint when a mesh
+context is active and is a no-op otherwise, so the same model code runs in
+single-device smoke tests and in the 512-chip dry-run.
+
+Default rules implement DP(+pod) x TP with FSDP over `data`:
+  batch   -> (pod, data)         activations' leading dim
+  seq     -> data when sequence-parallel (long-context cells), else None
+  embed   -> data (FSDP: gathers inserted by GSPMD per layer)
+  heads/kv_heads/mlp/vocab/experts -> model (megatron TP)
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ctx = threading.local()
+
+DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_res": "model",  # Megatron-SP: residual stream seq over `model`
+    # between layers, so remat-saved activations shrink by the TP degree.
+    "embed": "data",  # FSDP shard of the weight's embed axis
+    "embed_act": None,  # activations' model dim stays replicated across data
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",
+    "vocab": "model",
+    "experts": "model",
+    "layers": None,
+    "conv": None,
+    "state": None,
+}
+
+SEQ_PARALLEL_RULES = dict(DEFAULT_RULES, seq="data")
+
+
+def _axes_for(mesh: Mesh, name):
+    if name is None:
+        return None
+    names = name if isinstance(name, tuple) else (name,)
+    present = tuple(n for n in names if n in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def spec_for(logical, mesh: Mesh, rules: dict) -> P:
+    """Logical names -> PartitionSpec; a mesh axis is used at most once
+    (first logical dim that claims it wins) so rule tables may map several
+    names to the same axis without producing invalid specs."""
+    used: set = set()
+    out = []
+    for n in logical:
+        axes = _axes_for(mesh, rules.get(n)) if n is not None else None
+        if axes is None:
+            out.append(None)
+            continue
+        axes_t = tuple(a for a in (axes if isinstance(axes, tuple) else (axes,))
+                       if a not in used)
+        used.update(axes_t)
+        out.append(axes_t if len(axes_t) > 1 else (axes_t[0] if axes_t else None))
+    return P(*out)
+
+
+@contextlib.contextmanager
+def sharding_ctx(mesh: Mesh | None, rules: dict | None = None):
+    prev = getattr(_ctx, "val", None)
+    _ctx.val = (mesh, rules or DEFAULT_RULES) if mesh is not None else None
+    try:
+        yield
+    finally:
+        _ctx.val = prev
+
+
+def current_mesh():
+    v = getattr(_ctx, "val", None)
+    return v
+
+
+def shard(x: jax.Array, *logical: str | None) -> jax.Array:
+    """Constrain activation sharding by logical axis names (no-op w/o mesh)."""
+    v = current_mesh()
+    if v is None:
+        return x
+    mesh, rules = v
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec_for(logical, mesh, rules)))
+
+
+def param_sharding(logical_tree, mesh: Mesh, rules: dict | None = None):
+    """Map a pytree of logical-axis tuples to NamedShardings (for dry-run specs)."""
+    rules = rules or DEFAULT_RULES
+    return jax.tree.map(
+        lambda lg: NamedSharding(mesh, spec_for(lg, mesh, rules)),
+        logical_tree, is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,315 @@
+"""Core transformer building blocks: norms, RoPE/M-RoPE, GQA attention, MLPs.
+
+Pure-JAX pytree modules.  Every `init_*` returns `(params, logical)` where
+`logical` mirrors the params tree with logical-axis tuples for sharding
+(see nn/common.py).  Attention supports three modes:
+
+  * train/prefill: causal flash-style attention (lax.scan over KV blocks,
+    O(S * block) memory — required for the 32k prefill cells);
+  * decode: single-token query against a KV cache (dynamic_update_slice);
+  * encoder (whisper): non-causal full attention.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.common import shard
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": ("embed_act",)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps) * p["scale"]).astype(x.dtype)
+
+
+def init_layernorm(d: int):
+    return ({"scale": jnp.ones((d,), jnp.float32), "bias": jnp.zeros((d,), jnp.float32)},
+            {"scale": ("embed_act",), "bias": ("embed_act",)})
+
+
+def layernorm(p, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE / M-RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: [B, S, H, dh]; positions: [B, S] int -> rotated x."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [B, S, dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, sections: tuple,
+                theta: float = 1e6) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: 3 position streams (t, h, w) own disjoint
+    frequency sections of the head dim.  positions3: [B, 3, S]; sections sum
+    to dh/2 (e.g. (16, 24, 24) for dh=128)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)  # [dh/2]
+    # section id per frequency -> which position stream drives it
+    sec_id = jnp.repeat(jnp.arange(3), jnp.array(sections), total_repeat_length=dh // 2)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, :, None], (x.shape[0], dh // 2, positions3.shape[-1])),
+        axis=1)  # [B, dh/2, S]
+    ang = jnp.einsum("bfs,f->bsf", pos, freqs)  # [B, S, dh/2]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense projections
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, d_in, d_out, logical, bias=False, scale=None):
+    scale = scale if scale is not None else (1.0 / d_in) ** 0.5
+    p = {"w": (jax.random.normal(key, (d_in, d_out)) * scale).astype(jnp.float32)}
+    lg = {"w": logical}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), jnp.float32)
+        lg["b"] = (logical[-1],)
+    return p, lg
+
+
+def dense(p, x):
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int | None = None
+    qkv_bias: bool = False
+    rope_theta: float = 1e4
+    mrope_sections: tuple | None = None  # set for qwen2-vl
+    causal: bool = True
+    flash_block: int = 1024
+
+    @property
+    def dh(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+
+def init_attention(key, cfg: AttnConfig):
+    dh = cfg.dh
+    ks = jax.random.split(key, 4)
+    p, lg = {}, {}
+    p["q"], lg["q"] = _dense_init(ks[0], cfg.d_model, cfg.n_heads * dh,
+                                  ("embed", "heads"), bias=cfg.qkv_bias)
+    p["k"], lg["k"] = _dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * dh,
+                                  ("embed", "kv_heads"), bias=cfg.qkv_bias)
+    p["v"], lg["v"] = _dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * dh,
+                                  ("embed", "kv_heads"), bias=cfg.qkv_bias)
+    p["o"], lg["o"] = _dense_init(ks[3], cfg.n_heads * dh, cfg.d_model,
+                                  ("heads", "embed"))
+    return p, lg
+
+
+def _qkv(p, x, cfg: AttnConfig, positions):
+    B, S, _ = x.shape
+    dh = cfg.dh
+    q = dense(p["q"], x).reshape(B, S, cfg.n_heads, dh)
+    k = dense(p["k"], x).reshape(B, S, cfg.n_kv_heads, dh)
+    v = dense(p["v"], x).reshape(B, S, cfg.n_kv_heads, dh)
+    if cfg.mrope_sections is not None:
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    elif positions is not None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    # Only the q heads get an explicit constraint; k/v inherit the weight
+    # sharding (forcing n_kv < mesh axis size causes involuntary resharding).
+    q = shard(q, "batch", "seq", "heads", None)
+    return q, k, v
+
+
+def flash_attention(q, k, v, *, causal: bool, block: int, q_offset=0) -> jax.Array:
+    """Blockwise-softmax attention: lax.scan over KV blocks, O(S*block) memory.
+
+    q: [B, Sq, H, dh]; k, v: [B, Sk, G, dh] with H = G * rep (GQA).  KV heads
+    are repeated up to H *inside* the kernel so every intermediate carries a
+    plain heads axis — the layout that shards cleanly over `model` (grouped
+    [.., G, rep, ..] layouts make GSPMD fall back to replication).
+    """
+    B, Sq, H, dh = q.shape
+    Sk, G = k.shape[1], k.shape[2]
+    rep = H // G
+    scale = dh ** -0.5
+    qf = (q.astype(jnp.float32) * scale)
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)  # [B, Sk, H, dh]
+        v = jnp.repeat(v, rep, axis=2)
+    pad = (-Sk) % block
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nb = k.shape[1] // block
+    kb = jnp.moveaxis(k.reshape(B, nb, block, H, dh), 1, 0)  # [nb, B, blk, H, dh]
+    vb = jnp.moveaxis(v.reshape(B, nb, block, H, dh), 1, 0)
+    q_pos = q_offset + jnp.arange(Sq)
+
+    def body(carry, inp):
+        m, l, acc, j = carry
+        kj, vj = inp
+        s = jnp.einsum("bqhd,bkhd->bqhk", qf, kj.astype(jnp.float32))
+        s = shard(s, "batch", "seq", "heads", None)
+        kv_pos = j * block + jnp.arange(block)
+        mask = kv_pos[None, :] <= q_pos[:, None] if causal else \
+            jnp.ones((Sq, block), bool)
+        valid = (kv_pos < Sk)[None, :]
+        s = jnp.where((mask & valid)[None, :, None, :], s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqhk,bkhd->bqhd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new, j + 1), None
+
+    m0 = jnp.full((B, Sq, H), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Sq, H), jnp.float32)
+    a0 = jnp.zeros((B, Sq, H, dh), jnp.float32)
+    # checkpoint the block body: without it the scan saves the [.., block]
+    # probability tensor for EVERY block for the backward pass (O(S^2) memory,
+    # defeating the point of the streaming formulation).
+    (m, l, acc, _), _ = jax.lax.scan(jax.checkpoint(body),
+                                     (m0, l0, a0, jnp.int32(0)), (kb, vb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, Sq, H, dh).astype(q.dtype)
+
+
+def attention(p, x, cfg: AttnConfig, positions=None) -> jax.Array:
+    """Full-sequence (train / prefill / encoder) attention."""
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg, positions)
+    out = flash_attention(q, k, v, causal=cfg.causal, block=min(cfg.flash_block, S))
+    out = out.reshape(B, S, cfg.n_heads * cfg.dh)
+    return shard(dense(p["o"], out), "batch", "seq", "embed_act")
+
+
+def _quant_kv(t: jax.Array):
+    """Per-(token, head) symmetric int8 quantisation of a [B, 1, G, dh] slab."""
+    amax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+    scale = amax.astype(jnp.float32) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(t.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode(p, x, cache: dict, cfg: AttnConfig, positions) -> tuple:
+    """Single-token decode. x: [B, 1, d]; cache: {'k','v': [B, Smax, G, dh],
+    'len': [B]} (+ 'k_scale','v_scale' when int8). Returns (out, new_cache).
+
+    With an int8 cache (beyond-paper optimization; the paper's Sec. IV-B
+    low-precision insight applied to the LM substrate) the dominant decode
+    HBM traffic — cache reads — halves vs bf16.
+    """
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    pos = cache["len"][0]
+    quantized = cache["k"].dtype == jnp.int8
+    new_cache = dict(cache)
+    if quantized:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        for name, val in (("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs)):
+            new_cache[name] = jax.lax.dynamic_update_slice(
+                cache[name], val.astype(cache[name].dtype), (0, pos, 0, 0))
+        k = new_cache["k"].astype(jnp.float32) * new_cache["k_scale"]
+        v = new_cache["v"].astype(jnp.float32) * new_cache["v_scale"]
+    else:
+        for name, val in (("k", k_new), ("v", v_new)):
+            new_cache[name] = jax.lax.dynamic_update_slice(
+                cache[name], val.astype(cache[name].dtype), (0, pos, 0, 0))
+        k, v = new_cache["k"], new_cache["v"]
+    Smax, G = k.shape[1], k.shape[2]
+    rep = cfg.n_heads // G
+    scale = cfg.dh ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, 1, G, rep, cfg.dh)
+    s = jnp.einsum("bqgrd,bkgd->bqgrk", qf, k.astype(jnp.float32))
+    valid = jnp.arange(Smax)[None, :] <= pos
+    s = jnp.where(valid[:, None, None, None, :][0][None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqgrk,bkgd->bqgrd", w, v.astype(jnp.float32))
+    out = out.reshape(B, 1, cfg.n_heads * cfg.dh).astype(x.dtype)
+    new_cache["len"] = cache["len"] + 1
+    return shard(dense(p["o"], out), "batch", None, "embed_act"), new_cache
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat16):
+    G, dh = cfg.n_kv_heads, cfg.dh
+    cache = {"k": jnp.zeros((batch, max_len, G, dh), dtype),
+             "v": jnp.zeros((batch, max_len, G, dh), dtype),
+             "len": jnp.zeros((batch,), jnp.int32)}
+    if dtype == jnp.int8:
+        cache["k_scale"] = jnp.zeros((batch, max_len, G, 1), jnp.float32)
+        cache["v_scale"] = jnp.zeros((batch, max_len, G, 1), jnp.float32)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_swiglu(key, d_model: int, d_ff: int):
+    ks = jax.random.split(key, 3)
+    p, lg = {}, {}
+    p["gate"], lg["gate"] = _dense_init(ks[0], d_model, d_ff, ("embed", "mlp"))
+    p["up"], lg["up"] = _dense_init(ks[1], d_model, d_ff, ("embed", "mlp"))
+    p["down"], lg["down"] = _dense_init(ks[2], d_ff, d_model, ("mlp", "embed"))
+    return p, lg
+
+
+def swiglu(p, x):
+    h = jax.nn.silu(dense(p["gate"], x)) * dense(p["up"], x)
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(dense(p["down"], h), "batch", "seq", "embed_act")
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, bias: bool = True):
+    ks = jax.random.split(key, 2)
+    p, lg = {}, {}
+    p["up"], lg["up"] = _dense_init(ks[0], d_model, d_ff, ("embed", "mlp"), bias=bias)
+    p["down"], lg["down"] = _dense_init(ks[1], d_ff, d_model, ("mlp", "embed"), bias=bias)
+    return p, lg
+
+
+def gelu_mlp(p, x):
+    h = jax.nn.gelu(dense(p["up"], x))
+    h = shard(h, "batch", "seq", "mlp")
+    return shard(dense(p["down"], h), "batch", "seq", "embed_act")

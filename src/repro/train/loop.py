@@ -1,0 +1,85 @@
+"""Generic fault-tolerant training loop.
+
+Wires together: jitted train_step, input pipeline (with checkpointable
+state), CheckpointManager (async/atomic/elastic), a straggler watchdog
+(per-step wall-clock EWMA; at pod scale the same hook drops a slow replica's
+contribution via the masked psum in distributed/collectives.py), and
+crash-resume (restores the latest checkpoint including pipeline position).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Iterable
+
+import jax
+
+from repro.train.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int
+    log_every: int = 10
+    checkpoint_every: int = 100
+    checkpoint_dir: str | None = None
+    keep_checkpoints: int = 3
+    straggler_factor: float = 3.0  # flag steps slower than factor x EWMA
+    ewma_alpha: float = 0.1
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    """Flags anomalously slow steps (node degradation / preemption signal)."""
+
+    factor: float = 3.0
+    alpha: float = 0.1
+    ewma: float | None = None
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        slow = self.ewma is not None and dt > self.factor * self.ewma
+        if slow:
+            self.flagged += 1
+        else:  # stragglers don't poison the running mean
+            self.ewma = dt if self.ewma is None else \
+                (1 - self.alpha) * self.ewma + self.alpha * dt
+        return slow
+
+
+def run(train_step: Callable, state: Any, data: Iterable, cfg: LoopConfig,
+        metrics_hook: Callable | None = None) -> Any:
+    """Run the loop; `train_step(state, batch) -> (state, metrics)` is jitted
+    by the caller.  `data` exposes optional .state()/.restore() for resume.
+    Returns the final train state.
+    """
+    ckpt = CheckpointManager(cfg.checkpoint_dir, keep=cfg.keep_checkpoints) \
+        if cfg.checkpoint_dir else None
+    start = 0
+    if ckpt is not None:
+        latest = ckpt.latest_step()
+        if latest is not None:
+            state, extra = ckpt.restore(latest, state)
+            start = latest
+            if hasattr(data, "restore") and "data_state" in extra:
+                data.restore(extra["data_state"])
+    watchdog = StragglerWatchdog(cfg.straggler_factor, cfg.ewma_alpha)
+    it = iter(data)
+    history = []
+    for step in range(start, cfg.total_steps):
+        batch = next(it)
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, batch)
+        jax.block_until_ready(metrics)
+        dt = time.perf_counter() - t0
+        slow = watchdog.observe(dt)
+        if metrics_hook and (step % cfg.log_every == 0 or slow):
+            metrics_hook(step, metrics, dt, slow)
+        if step % cfg.log_every == 0:
+            history.append((step, jax.tree.map(float, metrics)))
+        if ckpt is not None and (step + 1) % cfg.checkpoint_every == 0:
+            extra = {"data_state": data.state()} if hasattr(data, "state") else {}
+            ckpt.save(step + 1, state, extra)
+    if ckpt is not None:
+        ckpt.wait()
+    return state, history

@@ -1,0 +1,166 @@
+"""Self-contained optimizers (SGD-M, AdamW, Adafactor) over parameter pytrees.
+
+optax-style API: ``opt.init(params) -> state``; ``opt.update(grads, state,
+params) -> (new_params, new_state)``.  State dtype is configurable so the
+huge assigned archs (jamba-398B) can hold moments in bf16 and fit HBM
+(DESIGN.md Sec. 5); Adafactor gives O(sqrt) state for the same reason.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (params, state)
+
+
+def _cast(tree, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), tree)
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgd(lr: float, momentum: float = 0.9, state_dtype=jnp.float32) -> Optimizer:
+    def init(params):
+        return {"mu": _cast(jax.tree.map(jnp.zeros_like, params), state_dtype),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        mu = jax.tree.map(lambda m, g: momentum * m.astype(jnp.float32) + g,
+                          state["mu"], grads)
+        params = jax.tree.map(lambda p, m: p - lr * m.astype(p.dtype), params, mu)
+        return params, {"mu": _cast(mu, state_dtype), "step": state["step"] + 1}
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float | Callable, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          state_dtype=jnp.float32) -> Optimizer:
+    """AdamW with optional LR schedule (callable of step) and bf16 moments."""
+
+    def init(params):
+        zeros = jax.tree.map(jnp.zeros_like, params)
+        return {"m": _cast(zeros, state_dtype), "v": _cast(zeros, state_dtype),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else lr
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+            v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+            u = (m32 / bc1) / (jnp.sqrt(v32 / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p - lr_t * u.astype(p.dtype)).astype(p.dtype), \
+                m32.astype(state_dtype), v32.astype(state_dtype)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return params, {"m": m, "v": v, "step": step}
+
+    return Optimizer(init, update)
+
+
+def adafactor(lr: float = 1e-2, decay: float = 0.8, eps: float = 1e-30,
+              min_dim_size_to_factor: int = 128) -> Optimizer:
+    """Factored second-moment optimizer: O(n+m) state for an n x m matrix.
+
+    The memory-frugal choice for the >=70B assigned archs' train_4k cells.
+    """
+
+    def _factored(shape) -> bool:
+        return len(shape) >= 2 and shape[-1] >= min_dim_size_to_factor \
+            and shape[-2] >= min_dim_size_to_factor
+
+    def init(params):
+        def leaf(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+            return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+        return {"slots": jax.tree.map(leaf, params),
+                "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        step = state["step"] + 1
+        beta = 1.0 - step.astype(jnp.float32) ** -decay
+
+        def upd(p, g, slot):
+            g = g.astype(jnp.float32)
+            g2 = g * g + eps
+            if "vr" in slot:
+                vr = beta * slot["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * slot["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                denom = jnp.sqrt(
+                    vr[..., None] * vc[..., None, :]
+                    / (jnp.mean(vr, axis=-1, keepdims=True)[..., None] + eps))
+                u = g / (denom + eps)
+                new_slot = {"vr": vr, "vc": vc}
+            else:
+                v = beta * slot["v"] + (1 - beta) * g2
+                u = g / (jnp.sqrt(v) + eps)
+                new_slot = {"v": v}
+            # update clipping (RMS <= 1) as in the original paper
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            return (p - lr * u.astype(p.dtype)).astype(p.dtype), new_slot
+
+        # A slot is exactly {"v": arr} or {"vr": arr, "vc": arr} — the value
+        # check matters because model params legitimately use "v" as a key
+        # (attention projections).
+        def is_slot(x):
+            return (isinstance(x, dict) and set(x) <= {"v", "vr", "vc"}
+                    and all(not isinstance(v, dict) for v in x.values()))
+
+        out = jax.tree.map(upd, params, grads, state["slots"],
+                           is_leaf=lambda x: is_slot(x) if isinstance(x, dict) else False)
+        istuple = lambda x: isinstance(x, tuple)
+        params = jax.tree.map(lambda o: o[0], out, is_leaf=istuple)
+        slots = jax.tree.map(lambda o: o[1], out, is_leaf=istuple)
+        return params, {"slots": slots, "step": step}
+
+    return Optimizer(init, update)
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        frac = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(s < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, total: int, decay_frac: float = 0.1):
+    """Warmup-Stable-Decay (MiniCPM's schedule — assigned arch minicpm-2b)."""
+    decay_start = int(total * (1 - decay_frac))
+
+    def lr(step):
+        s = step.astype(jnp.float32)
+        warm = peak_lr * s / max(warmup, 1)
+        dec = peak_lr * jnp.clip(1.0 - (s - decay_start) / max(total - decay_start, 1),
+                                 0.0, 1.0)
+        return jnp.where(s < warmup, warm, jnp.where(s < decay_start, peak_lr, dec))
+
+    return lr

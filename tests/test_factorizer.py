@@ -1,0 +1,132 @@
+"""Factorizer behaviour: convergence, masking, quantisation, stochasticity."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import codebook as cbk
+from repro.core import factorizer as fz
+from repro.core import vsa
+
+
+def _problem(cfg, trials, seed=7):
+    cbs = fz.make_codebooks(jax.random.PRNGKey(1), cfg)
+    idxs = jax.random.randint(jax.random.PRNGKey(seed), (trials, cfg.num_factors),
+                              0, cfg.codebook_size)
+    qs = jax.vmap(lambda i: fz.bind_combo(cbs, i, cfg.vsa))(idxs)
+    return cbs, idxs, qs
+
+
+def test_unitary_raven_scale_accuracy():
+    cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(1024, 4), num_factors=3,
+                              codebook_size=10, algebra="unitary",
+                              activation="abs", noise_std=0.3, restart_every=20,
+                              max_iters=60, conv_threshold=0.55)
+    cbs, idxs, qs = _problem(cfg, 32)
+    res = fz.factorize_batch(qs, cbs, jax.random.PRNGKey(2), cfg)
+    assert float((res.indices == idxs).all(-1).mean()) >= 0.95
+    assert float(res.iterations.mean()) < 20
+
+
+def test_bipolar_accuracy():
+    cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(1024, 1024), num_factors=3,
+                              codebook_size=10, algebra="bipolar",
+                              noise_std=0.3, restart_every=20,
+                              max_iters=100, conv_threshold=0.5)
+    cbs, idxs, qs = _problem(cfg, 24)
+    res = fz.factorize_batch(qs, cbs, jax.random.PRNGKey(2), cfg)
+    assert float((res.indices == idxs).all(-1).mean()) >= 0.9
+
+
+def test_noisy_query_robustness():
+    cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(1024, 4), num_factors=3,
+                              codebook_size=10, algebra="unitary",
+                              activation="abs", noise_std=0.3, restart_every=20,
+                              max_iters=60, conv_threshold=0.5)
+    cbs, idxs, qs = _problem(cfg, 24)
+    qs = qs + 0.5 * jnp.std(qs) * jax.random.normal(jax.random.PRNGKey(3), qs.shape)
+    res = fz.factorize_batch(qs, cbs, jax.random.PRNGKey(2), cfg)
+    assert float((res.indices == idxs).all(-1).mean()) >= 0.85
+
+
+def test_variable_cardinality_mask():
+    """RAVEN-style factors of different sizes via validity mask."""
+    sizes = (5, 6, 10)
+    cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(1024, 4), num_factors=3,
+                              codebook_size=max(sizes), algebra="unitary",
+                              activation="abs", noise_std=0.3, restart_every=20,
+                              max_iters=60, conv_threshold=0.55)
+    cbs = fz.make_codebooks(jax.random.PRNGKey(1), cfg)
+    mask = jnp.stack([jnp.arange(max(sizes)) < n for n in sizes])
+    idxs = jnp.stack([jax.random.randint(jax.random.PRNGKey(10 + f), (16,), 0, n)
+                      for f, n in enumerate(sizes)], -1)
+    qs = jax.vmap(lambda i: fz.bind_combo(cbs, i, cfg.vsa))(idxs)
+    res = fz.factorize_batch(qs, cbs, jax.random.PRNGKey(2), cfg, mask)
+    assert float((res.indices == idxs).all(-1).mean()) >= 0.9
+    # decoded indices always inside each factor's valid range
+    for f, n in enumerate(sizes):
+        assert int(res.indices[:, f].max()) < n
+
+
+def test_int8_codebooks_parity():
+    cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(1024, 4), num_factors=3,
+                              codebook_size=10, algebra="unitary",
+                              activation="abs", noise_std=0.3, restart_every=20,
+                              max_iters=60, conv_threshold=0.55,
+                              codebook_fmt="int8")
+    cbs, idxs, qs = _problem(cfg, 24)
+    qt = fz.quantize_codebooks(cbs, "int8")
+    res = fz.factorize_batch(qs, qt, jax.random.PRNGKey(2), cfg)
+    assert float((res.indices == idxs).all(-1).mean()) >= 0.9
+    # Tab. IX memory claim: int8 codebooks are 4x smaller
+    assert qt.nbytes() < cbs.size * 4 / 3.5
+
+
+def test_stochasticity_improves_hard_case():
+    """Paper Tab. VIII: noise + restarts lift accuracy on the F=4 regime."""
+    base = dict(vsa=vsa.VSAConfig(1024, 4), num_factors=4, codebook_size=10,
+                algebra="unitary", activation="abs", max_iters=150,
+                conv_threshold=0.9)
+    cfg0 = fz.FactorizerConfig(**base, noise_std=0.0, restart_every=0)
+    cfg1 = fz.FactorizerConfig(**base, noise_std=0.3, restart_every=20)
+    cbs, idxs, qs = _problem(cfg0, 32)
+    acc0 = float((fz.factorize_batch(qs, cbs, jax.random.PRNGKey(2), cfg0)
+                  .indices == idxs).all(-1).mean())
+    acc1 = float((fz.factorize_batch(qs, cbs, jax.random.PRNGKey(2), cfg1)
+                  .indices == idxs).all(-1).mean())
+    assert acc1 > acc0 + 0.05
+
+
+def test_brute_force_codebook_baseline():
+    cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(512, 4), num_factors=3,
+                              codebook_size=8, algebra="unitary")
+    cbs, idxs, qs = _problem(cfg, 16)
+    pcb = cbk.build_product_codebook(cbs, cfg.vsa)
+    assert pcb.vectors.shape == (8 ** 3, 512)
+    dec = cbk.brute_force_decode(qs, pcb)
+    assert (np.asarray(dec) == np.asarray(idxs)).all()
+
+
+def test_memory_accounting():
+    cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(1024, 4), num_factors=3,
+                              codebook_size=16, algebra="unitary")
+    b = fz.codebook_bytes(cfg)
+    assert b["product_bytes"] == 16 ** 3 * 1024 * 4
+    assert b["factorized_bytes"] == 3 * 16 * 1024 * 4
+    assert b["reduction"] > 80
+
+
+def test_fused_step_matches_unfused_sync():
+    """factorize(fused_step=True) decodes identically to the plain Jacobi
+    path (same seeds, bipolar, no noise) — the Pallas inner loop is a
+    drop-in replacement."""
+    base = dict(vsa=vsa.VSAConfig(1024, 1024), num_factors=3, codebook_size=10,
+                algebra="bipolar", synchronous=True, noise_std=0.0,
+                max_iters=60, conv_threshold=0.5)
+    cfg_plain = fz.FactorizerConfig(**base, fused_step=False)
+    cfg_fused = fz.FactorizerConfig(**base, fused_step=True)
+    cbs, idxs, qs = _problem(cfg_plain, 16)
+    r_plain = fz.factorize_batch(qs, cbs, jax.random.PRNGKey(2), cfg_plain)
+    r_fused = fz.factorize_batch(qs, cbs, jax.random.PRNGKey(2), cfg_fused)
+    assert (np.asarray(r_plain.indices) == np.asarray(r_fused.indices)).all()
+    assert (np.asarray(r_plain.iterations) == np.asarray(r_fused.iterations)).all()

@@ -1,0 +1,68 @@
+"""Per-kernel allclose sweeps against the pure-jnp oracles (interpret mode)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quantization import quantize
+from repro.kernels.circconv import kernel as cck
+from repro.kernels.circconv import ref as ccr
+from repro.kernels.similarity import kernel as simk
+from repro.kernels.similarity import ref as simr
+
+
+@pytest.mark.parametrize("n,L", [(1, 64), (4, 128), (32, 256), (7, 100),
+                                 (130, 64), (16, 1024)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_circconv_rows_matches_ref(n, L, dtype):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(n * 1000 + L))
+    x = jax.random.normal(k1, (n, L), dtype)
+    y = jax.random.normal(k2, (n, L), dtype)
+    out = cck.circconv_rows(x, y, interpret=True)
+    ref = ccr.circconv_rows_ref(x, y)
+    tol = 1e-4 if dtype == jnp.float32 else 0.15
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol * np.sqrt(L), rtol=tol)
+
+
+@pytest.mark.parametrize("L,tile", [(512, 128), (1024, 256), (777, 256)])
+def test_circconv_mxu_single(L, tile):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(L))
+    x = jax.random.normal(k1, (L,))
+    y = jax.random.normal(k2, (L,))
+    out = cck.circconv_single_mxu(x, y, tile=tile, interpret=True)
+    ref = ccr.circconv_rows_ref(x[None], y[None])[0]
+    np.testing.assert_allclose(out, ref, atol=1e-3, rtol=1e-4)
+
+
+def test_circcorr_is_unbind():
+    from repro.kernels.circconv import ops
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = jax.random.normal(k1, (4, 2, 128))
+    y = jax.random.normal(k2, (4, 2, 128))
+    b = ops.block_circconv(x, y)
+    ref = ccr.circcorr_rows_ref(b.reshape(-1, 128), y.reshape(-1, 128))
+    out = ops.block_circcorr(b, y)
+    np.testing.assert_allclose(out.reshape(-1, 128), ref, atol=1e-3, rtol=1e-3)
+
+
+@pytest.mark.parametrize("n,m,d", [(1, 10, 64), (7, 100, 512), (128, 257, 1024),
+                                   (3, 1000, 100)])
+def test_similarity_int8_matches_ref(n, m, d):
+    kq, kw = jax.random.split(jax.random.PRNGKey(n + m + d))
+    q = jax.random.normal(kq, (n, d))
+    w = quantize(jax.random.normal(kw, (m, d)), "int8")
+    out = simk.similarity_int8(q, w.values, w.scale, interpret=True)
+    ref = simr.similarity_int8_ref(q, w.values, w.scale)
+    np.testing.assert_allclose(out, ref, atol=2e-2, rtol=1e-3)
+
+
+def test_similarity_int8_vs_fp32_accuracy():
+    """Quantised scores must preserve the argmax (Tab. IX parity)."""
+    kq, kw = jax.random.split(jax.random.PRNGKey(9))
+    w_f = jax.random.normal(kw, (50, 512))
+    q = w_f[17] + 0.1 * jax.random.normal(kq, (512,))
+    w = quantize(w_f, "int8")
+    scores = simk.similarity_int8(q[None], w.values, w.scale, interpret=True)
+    assert int(jnp.argmax(scores)) == 17

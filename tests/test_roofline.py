@@ -1,0 +1,98 @@
+"""Roofline machinery tests: XLA cost_analysis limitation + collective parser."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import roofline as R
+
+
+def test_cost_analysis_counts_while_body_once():
+    """The documented XLA limitation that motivates the analytic cost model:
+    identical flops reported for 1 and 16 scan iterations."""
+    def make(n):
+        def f(x, w):
+            def body(x, _):
+                return jnp.tanh(x @ w), None
+            x, _ = jax.lax.scan(body, x, None, length=n)
+            return x
+        return f
+
+    x = jnp.ones((64, 128))
+    w = jnp.ones((128, 128))
+    # n=1 unrolls (no while); compare two genuine loops instead
+    f4 = jax.jit(make(4)).lower(x, w).compile().cost_analysis()["flops"]
+    f16 = jax.jit(make(16)).lower(x, w).compile().cost_analysis()["flops"]
+    assert f4 == f16  # if XLA ever fixes this, the analytic model can retire
+
+
+_SYNTH_HLO = """
+HloModule synth
+
+%body (p: (s32[], f32[8,128])) -> (s32[], f32[8,128]) {
+  %p = (s32[], f32[8,128]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[8,128] get-tuple-element(%p), index=1
+  %ag = f32[8,128]{1,0} all-gather(%x), dimensions={0}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[8,128]) tuple(%ip, %ag)
+}
+
+%cond (pc: (s32[], f32[8,128])) -> pred[] {
+  %pc = (s32[], f32[8,128]) parameter(0)
+  %ic = s32[] get-tuple-element(%pc), index=0
+  %n = s32[] constant(24)
+  ROOT %lt = pred[] compare(%ic, %n), direction=LT
+}
+
+ENTRY %main (a: f32[8,128]) -> f32[8,128] {
+  %a = f32[8,128] parameter(0)
+  %ar = f32[8,128]{1,0} all-reduce(%a), to_apply=%sum
+  %zero = s32[] constant(0)
+  %init = (s32[], f32[8,128]) tuple(%zero, %ar)
+  %w = (s32[], f32[8,128]) while(%init), condition=%cond, body=%body
+  ROOT %out = f32[8,128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_parser_trip_count_multiplication():
+    cb = R.collective_bytes(_SYNTH_HLO)
+    elem = 8 * 128 * 4  # f32[8,128]
+    # the all-gather sits inside a 24-trip while: 24x its operand bytes
+    assert cb["all-gather"] == pytest.approx(24 * elem)
+    # the all-reduce is in ENTRY: counted once
+    assert cb["all-reduce"] == pytest.approx(elem)
+    assert cb["total"] == pytest.approx(25 * elem)
+
+
+def test_shape_bytes_tuple_and_layout():
+    assert R._shape_bytes("bf16[4,8]{1,0}") == 64
+    assert R._shape_bytes("(f32[2,2], s32[3])") == 16 + 12
+    assert R._shape_bytes("pred[10]") == 10
+
+
+def test_roofline_terms_bottleneck():
+    t = R.roofline_terms(flops=1e18, bytes_hbm=1e12, coll_bytes=1e12, chips=256)
+    assert t["bottleneck"] == "compute"
+    t = R.roofline_terms(flops=1e12, bytes_hbm=1e15, coll_bytes=1e12, chips=256)
+    assert t["bottleneck"] == "memory"
+
+
+def test_sanitize_uneven_and_duplicates():
+    import os
+    if len(jax.devices()) < 2:
+        from jax.sharding import PartitionSpec as P
+        # single-device session: exercise the pure logic via a fake mesh-like
+        class FakeMesh:
+            axis_names = ("data", "model")
+            class devices:
+                shape = (16, 16)
+                size = 256
+        from repro.launch.dryrun import _sanitize
+        # uneven dim drops the axis
+        spec = _sanitize(P("model"), (8,), FakeMesh)
+        assert spec == P(None)
+        # duplicate axis across dims keeps first occurrence only
+        spec = _sanitize(P("model", "model"), (32, 32), FakeMesh)
+        assert spec == P("model", None)

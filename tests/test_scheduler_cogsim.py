@@ -1,0 +1,105 @@
+"""adSCH scheduler invariants (hypothesis) + cogsim cycle-model checks."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cogsim import model as hw
+from repro.core import scheduler as sch
+
+
+def random_graph(draw_ops, seed):
+    import random
+    rnd = random.Random(seed)
+    ops = []
+    for b in range(draw_ops // 4 + 1):
+        prev = None
+        for i in range(min(4, draw_ops - len(ops))):
+            name = f"b{b}_op{i}"
+            kind = rnd.choice(["gemm", "circconv", "simd", "conv2d"])
+            dims = {"gemm": (64, 256, 512), "conv2d": (1024, 288, 64),
+                    "circconv": (rnd.randint(1, 64), rnd.choice([64, 256, 1024])),
+                    "simd": (rnd.randint(1, 10) * 4096,)}[kind]
+            ops.append(sch.Op(name, kind, dims,
+                              deps=(prev,) if prev and rnd.random() < 0.7 else (),
+                              batch=b, symbolic=kind in ("circconv", "simd")))
+            prev = name
+    return ops
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 20), st.integers(0, 10_000))
+def test_schedule_invariants(n_ops, seed):
+    ops = random_graph(n_ops, seed)
+    s = sch.schedule(ops, hw.COGSYS, interleave=True)
+    sch.validate(s, ops)  # deps respected + no cell double-booking
+    assert len(s.placements) == len(ops)
+    assert 0.0 <= s.utilization <= 1.0 + 1e-9
+    if any(o.kind != "simd" for o in ops):  # SIMD ops don't occupy cells
+        assert s.utilization > 0.0
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 16), st.integers(0, 10_000))
+def test_interleaving_bounded_regression(n_ops, seed):
+    """Greedy list scheduling is not per-instance monotone (reserving a cell
+    sliver for symbolic overlap can cost on tiny graphs), but interleaving
+    must never be catastrophically worse — and wins on real workloads
+    (test_interleaving_wins_on_nvsa_graph)."""
+    ops = random_graph(n_ops, seed)
+    on = sch.schedule(ops, hw.COGSYS, interleave=True)
+    off = sch.schedule(ops, hw.COGSYS, interleave=False)
+    assert on.makespan <= off.makespan * 1.3 + 1e-6
+
+
+def test_interleaving_wins_on_nvsa_graph():
+    import sys, os
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    from benchmarks.common import TASKS, nvsa_op_graph
+    ops = nvsa_op_graph(TASKS["RAVEN"], batches=3)
+    on = sch.schedule(ops, hw.COGSYS, interleave=True)
+    off = sch.schedule(ops, hw.COGSYS, interleave=False)
+    assert on.makespan < off.makespan * 0.9  # >=10% saving on the real graph
+
+
+def test_bs_cycle_formula():
+    """Sec. V-C: 1-D array latency T = 3M + d - 1; M == d -> 4d - 1."""
+    one_col = hw.ArrayConfig("t", num_cells=1, cell_dim=32, cwp=False)
+    r = hw.bs_circconv_cycles(one_col, k=1, d=32)
+    assert r["compute_cycles"] == 3 * 32 + 32 - 1  # == 4d - 1
+
+
+def test_st_mapping_matches_paper_example():
+    """Sec. V-D/V-E: the (N=32, M=512) configuration with d=1024, NVSA k=210
+    opts for temporal mapping with 32 parallel convolutions."""
+    cfg = hw.ArrayConfig("t", num_cells=32, cell_dim=512, cwp=False)
+    r = hw.bs_circconv_cycles(cfg, k=210, d=1024)
+    assert r["mapping"] == "temporal"
+
+
+def test_cogsys_beats_tpu_like_on_circconv():
+    for d in (64, 256, 1024, 4096):
+        for k in (1, 32, 210, 1024):
+            c = hw.bs_circconv_cycles(hw.COGSYS, k, d)["cycles"]
+            t = hw.sa_circconv_as_gemv_cycles(hw.TPU_LIKE, k, d)["cycles"]
+            assert t / c > 1.0, (d, k)
+
+
+def test_speedup_magnitude_matches_paper():
+    """Fig. 17 claims up to ~76x over the TPU-like SA; our model must land
+    in that order of magnitude at the paper's operating points."""
+    best = max(hw.sa_circconv_as_gemv_cycles(hw.TPU_LIKE, k, d)["cycles"]
+               / hw.bs_circconv_cycles(hw.COGSYS, k, d)["cycles"]
+               for d in (64, 128, 256, 512, 1024) for k in (16, 64, 210, 512))
+    assert 20 < best < 500
+
+
+def test_area_power_anchor():
+    ap = hw.area_power(hw.COGSYS, "int8")
+    assert ap["area_mm2"] == 4.0 and ap["power_w"] == 1.48
+    fp32 = hw.area_power(hw.COGSYS, "fp32")
+    assert fp32["area_mm2"] > 7 * ap["area_mm2"] / 1.05  # Tab. IX 7.71x area
+
+
+def test_gemm_cells_speedup():
+    one = hw.sa_gemm_cycles(hw.COGSYS, 256, 2048, 1024, cells=1)["compute_cycles"]
+    sixteen = hw.sa_gemm_cycles(hw.COGSYS, 256, 2048, 1024, cells=16)["compute_cycles"]
+    assert one / sixteen > 8  # near-linear scale-out on N-dim split

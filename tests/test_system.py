@@ -1,0 +1,87 @@
+"""End-to-end system tests: the full neurosymbolic pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import factorizer as fz
+from repro.data import raven
+from repro.models import nvsa
+
+
+def _oracle_frontend(cfg, cbs, grids, noise=0.3, key=None):
+    """Stand-in for a trained CNN: ground-truth bound queries + noise."""
+    B = grids["type"].shape[0]
+    attrs = jnp.stack([grids[a].reshape(B, 9) for a in raven.ATTRS], -1)  # [B,9,3]
+    qs = nvsa.target_query(cbs, attrs, cfg)
+    return qs + noise * jnp.std(qs) * jax.random.normal(key, qs.shape)
+
+
+def test_nvsa_pipeline_oracle_frontend():
+    """Perception noise -> factorize -> abduce -> execute -> select >= 85%."""
+    cfg = nvsa.NVSAConfig()
+    k_cb, k_n = jax.random.split(jax.random.PRNGKey(0))
+    cbs, mask = nvsa.make_codebooks(k_cb, cfg)
+    ds = raven.RavenDataset(raven.RavenConfig(batch_size=24, seed=5, render=False))
+    b = ds.next_batch()
+    grids = {a: jnp.asarray(b[f"grid_{a}"]) for a in raven.ATTRS}
+    qs = _oracle_frontend(cfg, cbs, grids, key=k_n)  # [B, 9, D]
+
+    from repro.core import symbolic as sym
+    B = 24
+    beliefs, res = nvsa.beliefs_from_queries(
+        qs[:, :8].reshape(B * 8, -1), cbs, mask, jax.random.PRNGKey(1), cfg)
+    assert float(res.converged.mean()) > 0.9
+    beliefs = beliefs.reshape(B, 8, 3, nvsa.MAX_M)
+    total = jnp.zeros((B, 8))
+    for ai, a in enumerate(raven.ATTRS):
+        n = raven.ATTR_SIZES[a]
+        g = beliefs[:, :, ai, :n]
+        g = g / (g.sum(-1, keepdims=True) + 1e-9)
+        grid = jnp.concatenate([g, jnp.full((B, 1, n), 1.0 / n)], 1).reshape(B, 3, 3, n)
+        post = sym.abduce_rules(grid)
+        pred = sym.execute_rules(grid, post)
+        total = total + sym.score_candidates(pred, jnp.asarray(b[f"cand_{a}"]))
+    acc = float((jnp.argmax(total, -1) == jnp.asarray(b["answer"])).mean())
+    assert acc >= 0.85, acc
+
+
+def test_trained_frontend_e2e_if_artifact_present():
+    """Full image pipeline when the trained frontend artifact exists."""
+    import os
+    import pickle
+    path = os.path.join(os.path.dirname(__file__), "..", "artifacts",
+                        "nvsa_frontend.pkl")
+    if not os.path.exists(path):
+        import pytest
+        pytest.skip("trained frontend artifact not present")
+    cfg = nvsa.NVSAConfig()
+    k_cb, _ = jax.random.split(jax.random.PRNGKey(0))
+    cbs, mask = nvsa.make_codebooks(k_cb, cfg)
+    params = jax.tree.map(jnp.asarray, pickle.load(open(path, "rb")))
+    ds = raven.RavenDataset(raven.RavenConfig(batch_size=32, seed=99))
+    b = {k: jnp.asarray(v) for k, v in ds.next_batch().items()}
+    out = nvsa.solve(params, b, cbs, mask, jax.random.PRNGKey(0), cfg)
+    acc = float((out["answer"] == b["answer"]).mean())
+    assert acc >= 0.85, acc  # paper: 98.5% at full training budget
+
+
+def test_lvrf_order_sensitivity():
+    """Regression: row encodings must NOT be permutation-invariant."""
+    from repro.core import vsa as vsa_mod
+    from repro.models import lvrf
+    cfg = lvrf.LVRFConfig()
+    atoms = lvrf.init_atoms(jax.random.PRNGKey(0), cfg)
+    e1 = lvrf.encode_row(atoms, jnp.array([4, 5, 9]), cfg)
+    e2 = lvrf.encode_row(atoms, jnp.array([5, 4, 9]), cfg)
+    assert float(vsa_mod.similarity(e1, e2)) < 0.2
+
+
+def test_mimonet_superposition_shapes_and_unbinding():
+    from repro.models import mimonet
+    cfg = mimonet.MIMONetConfig(num_streams=2, hidden=(256, 256))
+    params = mimonet.init(jax.random.PRNGKey(0), cfg)
+    imgs = jax.random.uniform(jax.random.PRNGKey(1), (4, 2, 32, 32))
+    logits = mimonet.apply(params, imgs, cfg)
+    assert [l.shape for l in logits] == [(4, 2, 5), (4, 2, 6), (4, 2, 10)]
+    # per-stream outputs must differ (unbinding separates the streams)
+    assert not np.allclose(np.asarray(logits[0][:, 0]), np.asarray(logits[0][:, 1]))

@@ -1,0 +1,96 @@
+"""VSA algebra property tests (hypothesis over dims/blocks/seeds)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import vsa
+
+
+def cfgs():
+    return st.sampled_from([
+        vsa.VSAConfig(dim=256, blocks=1), vsa.VSAConfig(dim=256, blocks=4),
+        vsa.VSAConfig(dim=512, blocks=8), vsa.VSAConfig(dim=240, blocks=4),
+    ])
+
+
+@settings(max_examples=20, deadline=None)
+@given(cfgs(), st.integers(0, 2**31 - 1))
+def test_bind_commutative(cfg, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = vsa.random_unitary(k1, (), cfg)
+    y = vsa.random_unitary(k2, (), cfg)
+    np.testing.assert_allclose(vsa.bind(x, y, cfg), vsa.bind(y, x, cfg),
+                               atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(cfgs(), st.integers(0, 2**31 - 1))
+def test_bind_associative(cfg, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x, y, z = (vsa.random_unitary(k, (), cfg) for k in ks)
+    a = vsa.bind(vsa.bind(x, y, cfg), z, cfg)
+    b = vsa.bind(x, vsa.bind(y, z, cfg), cfg)
+    np.testing.assert_allclose(a, b, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(cfgs(), st.integers(0, 2**31 - 1))
+def test_unbind_exact_for_unitary(cfg, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = vsa.random_unitary(k1, (), cfg)
+    y = vsa.random_unitary(k2, (), cfg)
+    rec = vsa.unbind(vsa.bind(x, y, cfg), y, cfg)
+    assert float(vsa.similarity(rec, x)) > 0.999
+
+
+@settings(max_examples=10, deadline=None)
+@given(cfgs(), st.integers(0, 2**31 - 1))
+def test_quasi_orthogonality(cfg, seed):
+    xs = vsa.random_unitary(jax.random.PRNGKey(seed), (16,), cfg)
+    sims = vsa.codebook_similarity(xs, xs) - jnp.eye(16)
+    assert float(jnp.abs(sims).max()) < 8.0 / np.sqrt(cfg.dim)
+
+
+def test_unitary_norm_one():
+    cfg = vsa.VSAConfig(dim=1024, blocks=4)
+    x = vsa.random_unitary(jax.random.PRNGKey(0), (8,), cfg)
+    np.testing.assert_allclose(jnp.linalg.norm(x, axis=-1), 1.0, atol=1e-5)
+
+
+def test_bipolar_self_inverse():
+    cfg = vsa.VSAConfig(dim=512, blocks=512)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = vsa.random_bipolar(k1, (), cfg)
+    y = vsa.random_bipolar(k2, (), cfg)
+    rec = vsa.bind(vsa.bind(x, y, cfg), y, cfg)  # bipolar: bind == unbind
+    np.testing.assert_allclose(rec, x, atol=1e-5)
+
+
+def test_impls_agree():
+    cfg = vsa.VSAConfig(dim=256, blocks=2)
+    k1, k2 = jax.random.split(jax.random.PRNGKey(1))
+    x = vsa.random_normal(k1, (3,), cfg)
+    y = vsa.random_normal(k2, (3,), cfg)
+    a = vsa.bind(x, y, cfg, impl="fft")
+    b = vsa.bind(x, y, cfg, impl="direct")
+    c = vsa.bind(x, y, cfg, impl="pallas")
+    np.testing.assert_allclose(a, b, atol=1e-4)
+    np.testing.assert_allclose(b, c, atol=1e-4)
+
+
+def test_bundle_preserves_members():
+    cfg = vsa.VSAConfig(dim=1024, blocks=4)
+    xs = vsa.random_unitary(jax.random.PRNGKey(2), (5,), cfg)
+    b = vsa.bundle(xs)
+    sims = vsa.similarity(b[None], xs)
+    assert float(sims.min()) > 0.25  # every member detectable
+
+
+def test_normalize_unitary_projects():
+    cfg = vsa.VSAConfig(dim=512, blocks=4)
+    x = vsa.random_normal(jax.random.PRNGKey(3), (), cfg) * 3.7
+    u = vsa.normalize_unitary(x, cfg)
+    spec = jnp.abs(jnp.fft.rfft(cfg.blockify(u), axis=-1))
+    np.testing.assert_allclose(spec, 1.0 / np.sqrt(cfg.blocks), rtol=1e-4)
