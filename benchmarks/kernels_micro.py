@@ -9,6 +9,8 @@ from benchmarks.common import row, timeit
 from repro.core.quantization import quantize
 from repro.kernels.circconv import kernel as cck
 from repro.kernels.circconv import ref as ccr
+from repro.kernels.resonator_step import kernel as rsk
+from repro.kernels.resonator_step import ref as rsr
 from repro.kernels.similarity import kernel as simk
 
 
@@ -32,4 +34,20 @@ def run():
                warmup=1, iters=3)
     rows.append(row("kernels", "similarity_int8(64x512x1024)", t * 1e6,
                     "codebook HBM traffic 1B/elem (4x less than fp32)"))
+    # fused resonator sweep: [Tn, D]-tiled MXU matmuls, codebook read once per
+    # (factor, row-tile) instead of once per query per factor
+    N, F, M, D = 64, 3, 16, 512
+    kb = jax.random.split(jax.random.PRNGKey(4), 3)
+    sgn = lambda k, s: jnp.where(jax.random.bernoulli(k, shape=s), 1.0, -1.0)
+    cbs = sgn(kb[0], (F, M, D))
+    qs, est = sgn(kb[1], (N, D)), sgn(kb[2], (N, F, D))
+    t_k = timeit(lambda a, b: rsk.resonator_step_batch(a, b, cbs, interpret=True),
+                 qs, est, warmup=1, iters=3)
+    t_r = timeit(jax.jit(lambda a, b: rsr.resonator_step_batch_ref(a, b, cbs)),
+                 qs, est, warmup=1, iters=3)
+    tiles = -(-N // rsk.row_tile(N))
+    rows.append(row("kernels", f"resonator_step_batch(n={N},f={F},m={M},d={D})",
+                    t_k * 1e6,
+                    f"codebook_hbm_passes/iter={tiles} (vs {N} at batch-1) "
+                    f"ref_us={t_r*1e6:.0f}"))
     return rows

@@ -30,7 +30,7 @@ def _accuracy(cfg, trials=64, seed=0, codebooks=None, qnoise=0.3):
     cbs = fz.make_codebooks(jax.random.PRNGKey(1), cfg)
     idxs = jax.random.randint(jax.random.PRNGKey(seed), (trials, cfg.num_factors),
                               0, cfg.codebook_size)
-    qs = jax.vmap(lambda i: fz.bind_combo(cbs, i, cfg.vsa))(idxs)
+    qs = fz.bind_combo(cbs, idxs, cfg.vsa)  # batched bind, no vmap
     if qnoise:
         qs = qs + qnoise * jnp.std(qs) * jax.random.normal(
             jax.random.PRNGKey(seed + 1), qs.shape)
@@ -169,7 +169,7 @@ def fig05_roofline():
     # one unbind+similarity sweep (the symbolic inner loop, loop-free for XLA)
     def sym_step(q):
         est = jnp.ones((128, 3, 1024))
-        ub = jax.vmap(lambda qq, ee: fz._unbind_all_but_one(qq, ee, cfg.factorizer))(q, est)
+        ub = fz._unbind_all_but_one(q, est, cfg.factorizer)  # batched, no vmap
         return jnp.einsum("nfd,fmd->nfm", ub, cbs)
     c_s = jax.jit(sym_step).lower(qs).compile()
     ca_s = c_s.cost_analysis()
@@ -191,7 +191,7 @@ def fig06_symbolic_breakdown():
     cbs = fz.make_codebooks(jax.random.PRNGKey(1), cfg)
     qs = jax.random.normal(jax.random.PRNGKey(0), (256, 1024))
     est = jax.random.normal(jax.random.PRNGKey(2), (256, 3, 1024))
-    unbind = jax.jit(jax.vmap(lambda q, e: fz._unbind_all_but_one(q, e, cfg)))
+    unbind = jax.jit(lambda q, e: fz._unbind_all_but_one(q, e, cfg))  # batch-native
     t_cc = timeit(unbind, qs, est)
     ub = unbind(qs, est)
     simi = jax.jit(lambda u: jnp.einsum("nfd,fmd->nfm", u, cbs))

@@ -18,11 +18,21 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", nargs="*", default=None)
     args = ap.parse_args()
-    from benchmarks import kernels_micro, paper_hardware, paper_tables
+    from benchmarks import factorizer_batch, kernels_micro, paper_hardware, paper_tables
 
+    mods = [paper_hardware, kernels_micro, paper_tables]
+    # the vmap-of-scalar baseline leg costs minutes in interpret mode, so the
+    # factorizer comparison only runs when asked for (it also has its own
+    # __main__ entry that writes BENCH_factorizer.json)
+    if args.only and any("factorizer" in o for o in args.only):
+        mods.insert(2, factorizer_batch)
     rows = []
-    for mod in (paper_hardware, kernels_micro, paper_tables):
-        rows += mod.run()
+    for mod in mods:
+        try:
+            rows += mod.run()
+        except Exception as e:  # one env-sensitive suite must not kill the rest
+            print(f"warning: {mod.__name__} failed: {type(e).__name__}: {e}",
+                  file=sys.stderr)
     if args.only:
         rows = [r for r in rows if any(o in r["benchmark"] for o in args.only)]
     print("name,us_per_call,derived")

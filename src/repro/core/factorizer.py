@@ -17,9 +17,16 @@ Two algebras:
     block-wise circular convolution (the hardware-relevant kernel), estimates
     re-projected to unit spectrum each step.
 
-Everything is a fixed-shape ``jax.lax.while_loop``, so the factorizer jits,
-vmaps over query batches, and shards (queries over `data`, codebook rows over
-`model`).
+The factorizer is **batch-native**: one fixed-shape ``jax.lax.while_loop``
+iterates over the whole query batch ``[N, F, D]`` with a per-query ``done``
+mask (converged queries freeze via ``jnp.where``; ``iterations`` is reported
+*per query*, not batch-max).  Every per-sweep operation — unbind, similarity,
+projection, convergence bind+cosine — runs as one ``[N, ...]`` batched op, so
+each codebook is streamed from HBM once per sweep for the *whole* batch
+instead of once per query, and the fused Pallas path
+(:mod:`repro.kernels.resonator_step`) sees MXU-shaped ``[Tn, D]`` tiles.
+``factorize`` (N=1) is a thin wrapper over the batched core, and the whole
+thing still jits and shards (queries over `data`, codebook rows over `model`).
 """
 from __future__ import annotations
 
@@ -61,11 +68,11 @@ class FactorizerConfig:
 
 
 class FactorizerResult(NamedTuple):
-    indices: jax.Array  # [F] int32 decoded atom per factor
-    iterations: jax.Array  # [] int32 iterations executed
-    converged: jax.Array  # [] bool
-    reconstruction_sim: jax.Array  # [] float32 cosine(q, bind(decoded))
-    scores: jax.Array  # [F, M] final similarity scores (soft beliefs)
+    indices: jax.Array  # [..., F] int32 decoded atom per factor
+    iterations: jax.Array  # [...] int32 iterations executed per query
+    converged: jax.Array  # [...] bool per query
+    reconstruction_sim: jax.Array  # [...] float32 cosine(q, bind(decoded))
+    scores: jax.Array  # [..., F, M] final similarity scores (soft beliefs)
 
 
 def make_codebooks(key: jax.Array, cfg: FactorizerConfig, dtype=jnp.float32) -> jax.Array:
@@ -77,9 +84,13 @@ def make_codebooks(key: jax.Array, cfg: FactorizerConfig, dtype=jnp.float32) -> 
 
 
 def bind_combo(codebooks: jax.Array, indices: jax.Array, cfg: VSAConfig) -> jax.Array:
-    """Product vector of one atom per factor: bind(X^1[i1], ..., X^F[iF])."""
-    atoms = jnp.take_along_axis(codebooks, indices[:, None, None], axis=1)[:, 0]
-    return vsa.bind_all(atoms, cfg)
+    """Product vector of one atom per factor: bind(X^1[i1], ..., X^F[iF]).
+
+    ``indices`` may carry leading batch dims: [..., F] -> [..., D].
+    """
+    F = codebooks.shape[0]
+    atoms = codebooks[jnp.arange(F), indices]  # [..., F, D]
+    return vsa.bind_all(atoms, cfg, axis=-2)
 
 
 def _norm(x: jax.Array, cfg: FactorizerConfig) -> jax.Array:
@@ -88,52 +99,38 @@ def _norm(x: jax.Array, cfg: FactorizerConfig) -> jax.Array:
     return vsa.normalize_unitary(x, cfg.vsa)
 
 
-def _unbind_all_but_one(q: jax.Array, est: jax.Array, cfg: FactorizerConfig) -> jax.Array:
-    """x~_i = q unbound by the product of the other factors' estimates [F, D].
+def _unbind(q: jax.Array, est: jax.Array, cfg: FactorizerConfig,
+            factor: int | None = None) -> jax.Array:
+    """x~_i = q unbound by the product of the other factors' estimates.
 
-    Estimates are normalised (self-inverse bipolar / unit-spectrum unitary),
-    so inv(prod / est_i) reduces to conj(prod) * est_i in the spectral domain
-    and to prod * est_i elementwise in the bipolar corner.
+    q: [..., D]; est: [..., F, D].  With ``factor=None`` returns the unbound
+    estimate for every factor [..., F, D]; with ``factor=i`` just that
+    factor's [..., D] (Gauss-Seidel inner step) without materialising the
+    rest.  Estimates are normalised (self-inverse bipolar / unit-spectrum
+    unitary), so inv(prod / est_i) reduces to conj(prod) * est_i in the
+    spectral domain and to prod * est_i elementwise in the bipolar corner.
     """
     vcfg = cfg.vsa
     if cfg.algebra == "bipolar":
-        prod = jnp.prod(est, axis=0)  # [D]
-        return q[None] * prod[None] * est  # est_i^2 == 1
+        prod = jnp.prod(est, axis=-2)  # [..., D]
+        if factor is None:
+            return q[..., None, :] * prod[..., None, :] * est  # est_i^2 == 1
+        return q * prod * est[..., factor, :]
     q_spec = jnp.fft.rfft(vcfg.blockify(q.astype(jnp.float32)), axis=-1)
     est_spec = jnp.fft.rfft(vcfg.blockify(est.astype(jnp.float32)), axis=-1)
-    prod = jnp.prod(est_spec, axis=0)
-    unbound_spec = q_spec[None] * jnp.conj(prod)[None] * est_spec
-    return vcfg.flatten(jnp.fft.irfft(unbound_spec, n=vcfg.lanes, axis=-1))
+    prod = jnp.prod(est_spec, axis=-3)  # [..., B, nfreq]
+    if factor is None:
+        unbound = (q_spec[..., None, :, :] * jnp.conj(prod)[..., None, :, :]
+                   * est_spec)
+    else:
+        unbound = q_spec * jnp.conj(prod) * est_spec[..., factor, :, :]
+    return vcfg.flatten(jnp.fft.irfft(unbound, n=vcfg.lanes, axis=-1))
 
 
-def _unbind_one(q: jax.Array, est: jax.Array, i: int, cfg: FactorizerConfig) -> jax.Array:
-    """x~_i for a single factor against the *current* estimates (Gauss-Seidel)."""
-    vcfg = cfg.vsa
-    if cfg.algebra == "bipolar":
-        prod = jnp.prod(est, axis=0)
-        return q * prod * est[i]
-    q_spec = jnp.fft.rfft(vcfg.blockify(q.astype(jnp.float32)), axis=-1)
-    est_spec = jnp.fft.rfft(vcfg.blockify(est.astype(jnp.float32)), axis=-1)
-    prod = jnp.prod(est_spec, axis=0)
-    unbound_spec = q_spec * jnp.conj(prod) * est_spec[i]
-    return vcfg.flatten(jnp.fft.irfft(unbound_spec, n=vcfg.lanes, axis=-1))
-
-
-def _scores(unbound: jax.Array, codebooks, cfg: FactorizerConfig) -> jax.Array:
-    """Step 2: similarity search [F, M]. Uses the fused int8 kernel when quantised."""
-    if isinstance(codebooks, QTensor):
-        use_kernel = codebooks.values.dtype == jnp.int8
-        per_factor = []
-        for f in range(cfg.num_factors):  # F is small and static
-            wf = QTensor(codebooks.values[f], codebooks.scale[f])
-            if use_kernel:
-                from repro.kernels.similarity import ops as sim_ops
-
-                per_factor.append(sim_ops.codebook_scores(unbound[f][None], wf)[0])
-            else:
-                per_factor.append(quantized_matvec(unbound[f], wf))
-        return jnp.stack(per_factor)
-    return jnp.einsum("fd,fmd->fm", unbound, codebooks)
+def _unbind_all_but_one(q: jax.Array, est: jax.Array, cfg: FactorizerConfig) -> jax.Array:
+    """All factors' unbound estimates [..., F, D] (batched; kept as the
+    public-ish spelling used by benchmarks)."""
+    return _unbind(q, est, cfg)
 
 
 def _activation(alpha: jax.Array, cfg: FactorizerConfig) -> jax.Array:
@@ -149,119 +146,167 @@ def _activation(alpha: jax.Array, cfg: FactorizerConfig) -> jax.Array:
 
 
 class _State(NamedTuple):
-    est: jax.Array  # [F, D] current normalised estimates
-    it: jax.Array
-    done: jax.Array
-    sim: jax.Array
-    key: jax.Array
+    est: jax.Array  # [N, F, D] current normalised estimates
+    iters: jax.Array  # [N] per-query sweeps executed (frozen at convergence)
+    done: jax.Array  # [N] per-query convergence mask
+    sim: jax.Array  # [N] reconstruction cosine (frozen at convergence)
+    keys: jax.Array  # [N, ...] per-query PRNG keys
+    it: jax.Array  # [] global sweep counter
 
 
 @partial(jax.jit, static_argnames=("cfg",))
-def factorize(q: jax.Array, codebooks, key: jax.Array, cfg: FactorizerConfig,
-              valid_mask: jax.Array | None = None) -> FactorizerResult:
-    """Factorise one query vector q [D] into one atom index per factor.
+def _factorize_batched(qs: jax.Array, codebooks, keys: jax.Array,
+                       cfg: FactorizerConfig,
+                       valid_mask: jax.Array | None = None) -> FactorizerResult:
+    """Batch-native core: ONE while_loop over state [N, F, D].
 
-    `codebooks` is either a dense [F, M, D] array or an int8/fp8 QTensor of
-    the same logical shape (memory-optimised variant, Tab. IX).
-    `valid_mask` [F, M] marks real atoms when factors have different
-    cardinalities (e.g. RAVEN's type/size/color = 5/6/10) and codebooks are
-    padded to a common M.
+    Converged queries freeze via the per-query ``done`` mask; the batch keeps
+    sweeping until every query converged or ``max_iters``.  ``keys`` is one
+    PRNG key per query (so the stochasticity stream of query i is independent
+    of the batch it rides in — factorize(q_i, k_i) and row i of
+    factorize_batch agree exactly).
     """
     vcfg = cfg.vsa
     dense_cb = codebooks.dequantize() if isinstance(codebooks, QTensor) else codebooks
     if cfg.algebra == "bipolar":
         dense_cb = vsa.normalize_sign(dense_cb)  # de-quantised atoms stay bipolar
-    if valid_mask is None:
+    no_mask = valid_mask is None
+    if no_mask:
         valid_mask = jnp.ones(dense_cb.shape[:2], dtype=bool)
     neg = jnp.asarray(-1e9, jnp.float32)
 
-    F = cfg.num_factors
+    N = qs.shape[0]
+    F, M, D = dense_cb.shape
+    use_int8_kernel = (isinstance(codebooks, QTensor)
+                       and codebooks.values.dtype == jnp.int8)
 
     def factor_update(i: int, est: jax.Array, k_sim, k_proj):
-        """One factor's unbind -> score -> project update; returns (alpha_i, new_est_i)."""
-        unbound = _unbind_one(q, est, i, cfg)  # [D]           (Step 1)
-        if isinstance(codebooks, QTensor):  # fused int8 similarity kernel path
-            alpha = quantized_matvec(unbound, QTensor(codebooks.values[i],
-                                                      codebooks.scale[i]))
+        """One factor's unbind -> score -> project update for the whole batch;
+        returns (alpha_i [N, M], new_est_i [N, D])."""
+        unbound = _unbind(qs, est, cfg, factor=i)  # [N, D]      (Step 1)
+        if isinstance(codebooks, QTensor):
+            wf = QTensor(codebooks.values[i], codebooks.scale[i])
+            if use_int8_kernel:  # fused int8 kernel, batched [N, D] entry
+                from repro.kernels.similarity import ops as sim_ops
+
+                alpha = sim_ops.codebook_scores(unbound, wf)
+            else:
+                alpha = quantized_matvec(unbound, wf)
         else:
             alpha = unbound @ dense_cb[i].T
-        alpha = jnp.where(valid_mask[i], alpha, neg)  #        (Step 2)
+        alpha = jnp.where(valid_mask[i], alpha, neg)  #          (Step 2)
         if cfg.noise_std > 0:  # stochasticity, relative to score spread
-            sigma = cfg.noise_std * jnp.std(jnp.where(valid_mask[i], alpha, 0.0))
-            alpha = jnp.where(valid_mask[i],
-                              alpha + sigma * jax.random.normal(k_sim, alpha.shape),
-                              alpha)
+            sigma = cfg.noise_std * jnp.std(
+                jnp.where(valid_mask[i], alpha, 0.0), axis=-1, keepdims=True)
+            noise = jax.vmap(lambda k: jax.random.normal(k, (M,)))(k_sim)
+            alpha = jnp.where(valid_mask[i], alpha + sigma * noise, alpha)
         w = _activation(alpha, cfg) * valid_mask[i]
-        new_est = w @ dense_cb[i]  #                           (Step 3)
+        new_est = w @ dense_cb[i]  #                             (Step 3)
         if cfg.proj_noise_std > 0:
-            sigma = cfg.proj_noise_std * jnp.std(new_est)
-            new_est = new_est + sigma * jax.random.normal(k_proj, new_est.shape)
+            sigma = cfg.proj_noise_std * jnp.std(new_est, axis=-1, keepdims=True)
+            new_est = new_est + sigma * jax.vmap(
+                lambda k: jax.random.normal(k, (D,)))(k_proj)
         return alpha, _norm(new_est, cfg)
 
     use_fused = (cfg.fused_step and cfg.algebra == "bipolar" and cfg.synchronous
                  and cfg.noise_std == 0 and cfg.proj_noise_std == 0
                  and not isinstance(codebooks, QTensor)
-                 and cfg.activation in ("identity", "abs"))
+                 and cfg.activation in ("identity", "abs")
+                 # the fused kernel's projection cannot see valid_mask, so a
+                 # padded codebook would leak invalid atoms into the estimates
+                 and no_mask)
 
     def step(s: _State) -> _State:
-        keys = jax.random.split(s.key, 2 * F + 2)
-        k_next, k_restart = keys[-1], keys[-2]
+        keys = jax.vmap(lambda k: jax.random.split(k, 2 * F + 2))(s.keys)
+        k_next, k_restart = keys[:, -1], keys[:, -2]
         est = s.est
-        alphas = []
-        if use_fused:  # fused Pallas sweep (one codebook pass per iteration)
+        if use_fused:  # fused Pallas sweep: one codebook pass per (f, row-tile)
             from repro.kernels.resonator_step import ops as rs
 
-            alpha, est = rs.fused_resonator_step(q, est, dense_cb,
-                                                 activation=cfg.activation)
-            alpha = jnp.where(valid_mask, alpha, neg)
-            alphas = list(alpha)
+            # use_fused implies no_mask, so alpha needs no validity masking
+            alpha, est = rs.fused_resonator_step_batch(
+                qs, est, dense_cb, activation=cfg.activation)
         elif cfg.synchronous:  # Jacobi: all factors from the same snapshot
             snapshot = est
-            outs = [factor_update(i, snapshot, keys[2 * i], keys[2 * i + 1])
+            outs = [factor_update(i, snapshot, keys[:, 2 * i], keys[:, 2 * i + 1])
                     for i in range(F)]
-            alphas = [o[0] for o in outs]
-            est = jnp.stack([o[1] for o in outs])
+            alpha = jnp.stack([o[0] for o in outs], axis=1)
+            est = jnp.stack([o[1] for o in outs], axis=1)
         else:  # Gauss-Seidel: each factor sees the freshest estimates
+            alphas = []
             for i in range(F):
-                alpha_i, est_i = factor_update(i, est, keys[2 * i], keys[2 * i + 1])
-                est = est.at[i].set(est_i)
+                alpha_i, est_i = factor_update(i, est, keys[:, 2 * i],
+                                               keys[:, 2 * i + 1])
+                est = est.at[:, i].set(est_i)
                 alphas.append(alpha_i)
-        alpha = jnp.stack(alphas)
-        # Convergence: do the hard-decoded atoms reconstruct q?
-        idx = jnp.argmax(alpha, axis=-1)
-        recon = bind_combo(dense_cb, idx, vcfg)
-        sim = vsa.similarity(recon, q)
-        done = sim >= cfg.conv_threshold
-        it = s.it + 1
+            alpha = jnp.stack(alphas, axis=1)
+        # Convergence (vectorized once per sweep): do the hard-decoded atoms
+        # reconstruct each query?
+        idx = jnp.argmax(alpha, axis=-1)  # [N, F]
+        recon = bind_combo(dense_cb, idx, vcfg)  # [N, D]
+        sim = vsa.similarity(recon, qs)  # [N]
+        active = ~s.done
+        # Freeze converged queries: their est/sim/iters stop evolving.
+        est = jnp.where(active[:, None, None], est, s.est)
+        sim = jnp.where(active, sim, s.sim)
+        iters = s.iters + active.astype(jnp.int32)
+        done = s.done | (sim >= cfg.conv_threshold)
         if cfg.restart_every > 0:  # escape limit cycles by re-randomising
-            do_restart = jnp.logical_and(~done, it % cfg.restart_every == 0)
-            noise_est = _norm(jax.random.normal(k_restart, est.shape), cfg)
-            est = jnp.where(do_restart, noise_est, est)
-        return _State(est, it, done, sim, k_next)
+            do_restart = jnp.logical_and(~done, iters % cfg.restart_every == 0)
+            noise_est = _norm(jax.vmap(
+                lambda k: jax.random.normal(k, (F, D)))(k_restart), cfg)
+            est = jnp.where(do_restart[:, None, None], noise_est, est)
+        return _State(est, iters, done, sim, k_next, s.it + 1)
 
     def cond(s: _State) -> jax.Array:
-        return jnp.logical_and(~s.done, s.it < cfg.max_iters)
+        return jnp.logical_and(jnp.any(~s.done), s.it < cfg.max_iters)
 
-    _, k_loop = jax.random.split(key)
-    # Superposition init: bundle of all (valid) atoms == zero-information estimate.
+    k_loop = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
+    # Superposition init: bundle of all (valid) atoms == zero-information
+    # estimate, identical for every query.
     init_est = _norm(jnp.einsum("fm,fmd->fd", valid_mask.astype(dense_cb.dtype),
                                 dense_cb), cfg)
-    s0 = _State(init_est, jnp.int32(0), jnp.bool_(False), jnp.float32(-1.0), k_loop)
+    s0 = _State(jnp.broadcast_to(init_est, (N, F, D)),
+                jnp.zeros(N, jnp.int32), jnp.zeros(N, bool),
+                jnp.full(N, -1.0, jnp.float32), k_loop, jnp.int32(0))
     s = jax.lax.while_loop(cond, step, s0)
 
     # Final decode from the converged estimates.
-    unbound = _unbind_all_but_one(q, s.est, cfg)
-    alpha = jnp.where(valid_mask, jnp.einsum("fd,fmd->fm", unbound, dense_cb), neg)
+    unbound = _unbind(qs, s.est, cfg)  # [N, F, D]
+    alpha = jnp.where(valid_mask[None],
+                      jnp.einsum("nfd,fmd->nfm", unbound, dense_cb), neg)
     idx = jnp.argmax(alpha, axis=-1).astype(jnp.int32)
     recon = bind_combo(dense_cb, idx, vcfg)
-    return FactorizerResult(idx, s.it, s.done, vsa.similarity(recon, q), alpha)
+    return FactorizerResult(idx, s.iters, s.done, vsa.similarity(recon, qs),
+                            alpha)
+
+
+def factorize(q: jax.Array, codebooks, key: jax.Array, cfg: FactorizerConfig,
+              valid_mask: jax.Array | None = None) -> FactorizerResult:
+    """Factorise one query vector q [D] into one atom index per factor.
+
+    Thin N=1 wrapper over the batched core (the public API survives the
+    batch-native rewrite).  `codebooks` is either a dense [F, M, D] array or
+    an int8/fp8 QTensor of the same logical shape (memory-optimised variant,
+    Tab. IX).  `valid_mask` [F, M] marks real atoms when factors have
+    different cardinalities (e.g. RAVEN's type/size/color = 5/6/10) and
+    codebooks are padded to a common M.
+    """
+    res = _factorize_batched(q[None], codebooks, key[None], cfg, valid_mask)
+    return jax.tree.map(lambda x: x[0], res)
 
 
 def factorize_batch(qs: jax.Array, codebooks, key: jax.Array, cfg: FactorizerConfig,
-                    valid_mask: jax.Array | None = None):
-    """vmap over a batch of queries [N, D]; keys split per query."""
+                    valid_mask: jax.Array | None = None) -> FactorizerResult:
+    """Factorise a batch of queries [N, D] in ONE while_loop.
+
+    Keys split per query, so row i reproduces ``factorize(qs[i], keys[i])``
+    exactly — including the stochasticity stream — while converged queries
+    freeze behind the per-query done mask instead of re-running to the
+    batch-max iteration count.
+    """
     keys = jax.random.split(key, qs.shape[0])
-    return jax.vmap(lambda q, k: factorize(q, codebooks, k, cfg, valid_mask))(qs, keys)
+    return _factorize_batched(qs, codebooks, keys, cfg, valid_mask)
 
 
 def quantize_codebooks(codebooks: jax.Array, fmt: str) -> QTensor:

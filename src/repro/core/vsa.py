@@ -159,12 +159,17 @@ def unbind(q: jax.Array, y: jax.Array, cfg: VSAConfig, impl: Impl | None = None)
     return bind(q, involution(y, cfg), cfg, impl=impl)
 
 
-def bind_all(xs: jax.Array, cfg: VSAConfig) -> jax.Array:
-    """Bind along axis 0: bind(xs[0], bind(xs[1], ...)). Done in Fourier domain."""
+def bind_all(xs: jax.Array, cfg: VSAConfig, axis: int = 0) -> jax.Array:
+    """Bind along ``axis``: bind(xs[0], bind(xs[1], ...)). Done in Fourier domain.
+
+    ``axis`` indexes into the *flat* [..., D] layout (e.g. ``axis=-2`` binds a
+    batch of atom stacks [..., F, D] -> [..., D] in one shot).
+    """
     if cfg.lanes == 1:  # MAP corner: binding is the Hadamard product
-        return jnp.prod(xs, axis=0)
+        return jnp.prod(xs, axis=axis)
     xb = cfg.blockify(xs).astype(jnp.float32)
-    spec = jnp.prod(jnp.fft.rfft(xb, axis=-1), axis=0)
+    ax = axis if axis >= 0 else axis - 1  # blockify appends one trailing dim
+    spec = jnp.prod(jnp.fft.rfft(xb, axis=-1), axis=ax)
     return cfg.flatten(jnp.fft.irfft(spec, n=cfg.lanes, axis=-1))
 
 

@@ -92,7 +92,7 @@ def _circconv_mxu_kernel(x_ref, y_ref, o_ref, *, L: int):
     n_idx = j * T + jax.lax.broadcasted_iota(jnp.int32, (L, T), 1)
     k_idx = jax.lax.broadcasted_iota(jnp.int32, (L, T), 0)
     gather_idx = (n_idx - k_idx) % L  # circulant column tile [L(k), T(n)]
-    C = jnp.take_along_axis(jnp.broadcast_to(y, (L, L)), gather_idx % L, axis=1)
+    C = jnp.take_along_axis(jnp.broadcast_to(y, (L, L)), gather_idx, axis=1)
     # Wait-free: y broadcast [L, L] then gathered per (k, n). Contract on MXU:
     o_ref[...] = (x @ C).astype(o_ref.dtype)
 

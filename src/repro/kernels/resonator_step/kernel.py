@@ -1,15 +1,21 @@
-"""Pallas TPU kernel: fused resonator iteration (bipolar MAP algebra).
+"""Pallas TPU kernel: fused resonator iteration (bipolar MAP algebra), batched.
 
 The factorizer's inner loop reads each codebook X[f] twice per iteration —
-once for the similarity matvec, once for the projection.  This kernel keeps
+once for the similarity matmul, once for the projection.  This kernel keeps
 the whole per-factor codebook resident in VMEM (M x D <= a few hundred KB at
 workload scale) and runs unbind -> similarity -> activation -> projection ->
 sign in ONE invocation: the codebook's HBM traffic halves and the unbound
-estimate / score vector never exist in HBM at all.
+estimate / score matrix never exist in HBM at all.
 
-Grid: one program per factor.  The all-factor estimate product (a [D]
-vector) is precomputed outside (it needs cross-factor data the grid cannot
-share) — everything per-factor is fused.
+Grid: ``(F, N // Tn)`` with the row-tile axis innermost, so factor f's
+codebook block index is constant across the inner sweep — Pallas fetches it
+from HBM once per (factor, row-sweep) and amortises that single pass over Tn
+queries.  Each program then issues two *real* MXU matmuls,
+``[Tn, D] @ [D, M]`` (similarity) and ``[Tn, M] @ [M, D]`` (projection),
+instead of the batch-1 vector-matrix products the pre-batched kernel did.
+The all-factor estimate product (a [N, D] array) is precomputed outside (it
+needs cross-factor data the grid cannot share) — everything per-factor is
+fused.
 """
 from __future__ import annotations
 
@@ -20,48 +26,81 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
+def row_tile(n: int, tn: int = 128) -> int:
+    """Row-tile policy: MXU-shaped (>= 8, multiple of 8), sized so zero-row
+    padding is bounded — N is split over the row-sweeps needed at the max
+    tile rather than padded straight up to it (N=130 -> Tn=72, 14 pad rows;
+    not Tn=128, 126 rows).  Exported so benchmarks report the same structural
+    metrics the kernel actually uses."""
+    tiles = -(-n // tn)
+    rows_per_tile = -(-n // tiles)
+    return max(8, -(-rows_per_tile // 8) * 8)
+
+
 def _step_kernel(q_ref, prod_ref, est_ref, cb_ref, alpha_ref, new_est_ref,
                  *, use_abs: bool):
-    q = q_ref[...].astype(jnp.float32)  # [1, D]
-    prod = prod_ref[...].astype(jnp.float32)  # [1, D]
-    est_f = est_ref[...].astype(jnp.float32)  # [1, D]
+    q = q_ref[...].astype(jnp.float32)  # [Tn, D]
+    prod = prod_ref[...].astype(jnp.float32)  # [Tn, D]
+    est_f = est_ref[...][0].astype(jnp.float32)  # [Tn, D]
     X = cb_ref[...][0].astype(jnp.float32)  # [M, D] — resident for BOTH matmuls
-    u = q * prod * est_f  # unbind (est^2 == 1)             [1, D]
-    alpha = jnp.dot(X, u[0])  # similarity                   [M]
+    u = q * prod * est_f  # unbind (est^2 == 1)               [Tn, D]
+    alpha = jax.lax.dot_general(  # similarity                [Tn, M]
+        u, X, dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
     w = jnp.abs(alpha) if use_abs else alpha
-    proj = jnp.dot(w, X)  # projection                       [D]
+    proj = jnp.dot(w, X, preferred_element_type=jnp.float32)  # [Tn, D]
     new_est_ref[...] = jnp.where(proj >= 0, 1.0, -1.0)[None].astype(
         new_est_ref.dtype)
     alpha_ref[...] = alpha[None].astype(alpha_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("activation", "tn", "interpret"))
+def resonator_step_batch(qs: jax.Array, est: jax.Array, codebooks: jax.Array,
+                         *, activation: str = "identity", tn: int = 128,
+                         interpret: bool = False):
+    """qs: [N, D]; est: [N, F, D] bipolar; codebooks: [F, M, D] ->
+    (alpha [N, F, M], new_est [N, F, D])."""
+    N = qs.shape[0]
+    F, M, D = codebooks.shape
+    prod = jnp.prod(est, axis=1)  # [N, D] cross-factor input
+    tn = row_tile(N, tn)
+    pad = (-N) % tn
+    if pad:  # zero rows: sign(0) = +1, sliced off below
+        qs = jnp.pad(qs, ((0, pad), (0, 0)))
+        prod = jnp.pad(prod, ((0, pad), (0, 0)))
+        est = jnp.pad(est, ((0, pad), (0, 0), (0, 0)))
+    Np = qs.shape[0]
+    est_t = jnp.swapaxes(est, 0, 1)  # [F, Np, D] so blocks tile (factor, rows)
+    alpha, new_est = pl.pallas_call(
+        functools.partial(_step_kernel, use_abs=activation == "abs"),
+        grid=(F, Np // tn),  # rows innermost: codebook f stays VMEM-resident
+        in_specs=[
+            pl.BlockSpec((tn, D), lambda f, n: (n, 0)),  # q row tile
+            pl.BlockSpec((tn, D), lambda f, n: (n, 0)),  # prod row tile
+            pl.BlockSpec((1, tn, D), lambda f, n: (f, n, 0)),  # est_f rows
+            pl.BlockSpec((1, M, D), lambda f, n: (f, 0, 0)),  # codebook f
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tn, M), lambda f, n: (f, n, 0)),
+            pl.BlockSpec((1, tn, D), lambda f, n: (f, n, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((F, Np, M), jnp.float32),
+            jax.ShapeDtypeStruct((F, Np, D), est.dtype),
+        ],
+        interpret=interpret,
+    )(qs, prod, est_t, codebooks)
+    return (jnp.swapaxes(alpha, 0, 1)[:N],  # [N, F, M]
+            jnp.swapaxes(new_est, 0, 1)[:N])  # [N, F, D]
 
 
 @functools.partial(jax.jit, static_argnames=("activation", "interpret"))
 def resonator_step(q: jax.Array, est: jax.Array, codebooks: jax.Array,
                    *, activation: str = "identity",
                    interpret: bool = False):
-    """q: [D]; est: [F, D] bipolar; codebooks: [F, M, D] ->
-    (alpha [F, M], new_est [F, D])."""
-    F, M, D = codebooks.shape
-    prod = jnp.prod(est, axis=0, keepdims=True)  # [1, D] cross-factor input
-    qb = jnp.broadcast_to(q[None], (F, D))
-    prodb = jnp.broadcast_to(prod, (F, D))
-    alpha, new_est = pl.pallas_call(
-        functools.partial(_step_kernel, use_abs=activation == "abs"),
-        grid=(F,),
-        in_specs=[
-            pl.BlockSpec((1, D), lambda f: (f, 0)),  # q (replicated rows)
-            pl.BlockSpec((1, D), lambda f: (f, 0)),  # prod
-            pl.BlockSpec((1, D), lambda f: (f, 0)),  # est_f
-            pl.BlockSpec((1, M, D), lambda f: (f, 0, 0)),  # codebook f
-        ],
-        out_specs=[
-            pl.BlockSpec((1, M), lambda f: (f, 0)),
-            pl.BlockSpec((1, D), lambda f: (f, 0)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((F, M), jnp.float32),
-            jax.ShapeDtypeStruct((F, D), est.dtype),
-        ],
-        interpret=interpret,
-    )(qb, prodb, est, codebooks)
-    return alpha, new_est
+    """Single-query wrapper: q: [D]; est: [F, D] bipolar; codebooks:
+    [F, M, D] -> (alpha [F, M], new_est [F, D])."""
+    alpha, new_est = resonator_step_batch(q[None], est[None], codebooks,
+                                          activation=activation,
+                                          interpret=interpret)
+    return alpha[0], new_est[0]

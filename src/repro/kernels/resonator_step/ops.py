@@ -1,4 +1,4 @@
-"""Public wrapper for the fused resonator step (backend dispatch)."""
+"""Public wrappers for the fused resonator step (backend dispatch)."""
 from __future__ import annotations
 
 import jax
@@ -7,8 +7,20 @@ from repro.kernels.resonator_step import kernel as _k
 from repro.kernels.resonator_step import ref as _ref
 
 
+def fused_resonator_step_batch(qs, est, codebooks, activation: str = "identity"):
+    """One fused Jacobi resonator sweep over a query batch (bipolar algebra).
+
+    qs: [N, D]; est: [N, F, D] -> (alpha [N, F, M], new_est [N, F, D]).
+    Each (factor, row-tile) program reads the codebook from HBM once and
+    amortises it over Tn queries with MXU-shaped matmuls; see
+    kernels/resonator_step/kernel.py.
+    """
+    return _k.resonator_step_batch(qs, est, codebooks, activation=activation,
+                                   interpret=jax.default_backend() != "tpu")
+
+
 def fused_resonator_step(q, est, codebooks, activation: str = "identity"):
-    """One fused Jacobi resonator sweep (bipolar algebra).
+    """One fused Jacobi resonator sweep for a single query (bipolar algebra).
 
     Halves per-iteration codebook HBM traffic vs separate similarity +
     projection matmuls; see kernels/resonator_step/kernel.py.
@@ -18,3 +30,4 @@ def fused_resonator_step(q, est, codebooks, activation: str = "identity"):
 
 
 resonator_step_ref = _ref.resonator_step_ref
+resonator_step_batch_ref = _ref.resonator_step_batch_ref

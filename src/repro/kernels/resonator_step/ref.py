@@ -11,16 +11,23 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def resonator_step_ref(q, est, codebooks, activation: str = "identity"):
-    """q: [D]; est: [F, D] bipolar; codebooks: [F, M, D].
+def resonator_step_batch_ref(qs, est, codebooks, activation: str = "identity"):
+    """qs: [N, D]; est: [N, F, D] bipolar; codebooks: [F, M, D].
 
-    Returns (alpha [F, M], new_est [F, D]) — the Gauss-Jacobi sweep (all
-    factors from the same snapshot; the fused kernel parallelises factors).
-    """
-    prod = jnp.prod(est, axis=0)  # [D]
-    u = q[None] * prod[None] * est  # [F, D]
-    alpha = jnp.einsum("fd,fmd->fm", u, codebooks)
+    Returns (alpha [N, F, M], new_est [N, F, D]) — the Gauss-Jacobi sweep
+    (all factors from the same snapshot; the fused kernel parallelises
+    factors and row tiles)."""
+    prod = jnp.prod(est, axis=1)  # [N, D]
+    u = qs[:, None] * prod[:, None] * est  # [N, F, D]
+    alpha = jnp.einsum("nfd,fmd->nfm", u, codebooks)
     w = jnp.abs(alpha) if activation == "abs" else alpha
-    proj = jnp.einsum("fm,fmd->fd", w, codebooks)
+    proj = jnp.einsum("nfm,fmd->nfd", w, codebooks)
     new_est = jnp.where(proj >= 0, 1.0, -1.0).astype(est.dtype)
     return alpha, new_est
+
+
+def resonator_step_ref(q, est, codebooks, activation: str = "identity"):
+    """Single-query oracle: q: [D]; est: [F, D] -> (alpha [F, M], new_est [F, D])."""
+    alpha, new_est = resonator_step_batch_ref(q[None], est[None], codebooks,
+                                              activation=activation)
+    return alpha[0], new_est[0]

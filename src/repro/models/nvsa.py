@@ -63,9 +63,7 @@ def make_codebooks(key: jax.Array, cfg: NVSAConfig):
 
 def target_query(codebooks: jax.Array, attrs: jax.Array, cfg: NVSAConfig) -> jax.Array:
     """Ground-truth product vector for supervision. attrs: [..., F] ints."""
-    flat = attrs.reshape(-1, attrs.shape[-1])
-    qs = jax.vmap(lambda a: fz.bind_combo(codebooks, a, cfg.vsa))(flat)
-    return qs.reshape(*attrs.shape[:-1], cfg.vsa.dim)
+    return fz.bind_combo(codebooks, attrs, cfg.vsa)  # batched bind, no vmap
 
 
 # ---------------------------------------------------------------------------
@@ -114,7 +112,13 @@ def perceive(params, images: jax.Array, cfg: NVSAConfig,
 
 
 def beliefs_from_queries(queries: jax.Array, codebooks, mask, key, cfg: NVSAConfig):
-    """Factorize query vectors [N, D] -> per-attribute beliefs + indices."""
+    """Factorize query vectors [N, D] -> per-attribute beliefs + indices.
+
+    All N = B*8 panel queries of a task batch ride ONE batch-native
+    factorizer while_loop (per-query convergence masking), so the whole
+    abduction hot path costs max-iters-over-batch sweeps of MXU-shaped
+    batched codebook passes instead of N separate resonator loops.
+    """
     res = fz.factorize_batch(queries, codebooks, key, cfg.factorizer, mask)
     # Soft beliefs from the final similarity scores.  Atoms are unit-norm and
     # unbinding is norm-preserving, so dividing by the query norm turns the
@@ -159,8 +163,11 @@ def solve(params, batch, codebooks, mask, key, cfg: NVSAConfig) -> dict:
     pred_q = vsa.bind_all(jnp.stack(pred_atoms), cfg.vsa)  # [B, D] predicted panel
     sims = vsa.similarity(pred_q[:, None, :], cand)  # [B, 8]
     answer = jnp.argmax(sims, axis=-1)
+    iters = ctx_res.iterations.reshape(B, 8)  # per query, not batch-max
     return {"answer": answer, "sims": sims,
-            "fact_iters": ctx_res.iterations.reshape(B, 8),
+            "fact_iters": iters,
+            "fact_mean_iters": jnp.mean(iters.astype(jnp.float32)),
+            "fact_max_iters": jnp.max(iters),
             "fact_converged": ctx_res.converged.reshape(B, 8)}
 
 

@@ -7,6 +7,8 @@ import pytest
 from repro.core.quantization import quantize
 from repro.kernels.circconv import kernel as cck
 from repro.kernels.circconv import ref as ccr
+from repro.kernels.resonator_step import kernel as rsk
+from repro.kernels.resonator_step import ref as rsr
 from repro.kernels.similarity import kernel as simk
 from repro.kernels.similarity import ref as simr
 
@@ -56,6 +58,38 @@ def test_similarity_int8_matches_ref(n, m, d):
     out = simk.similarity_int8(q, w.values, w.scale, interpret=True)
     ref = simr.similarity_int8_ref(q, w.values, w.scale)
     np.testing.assert_allclose(out, ref, atol=2e-2, rtol=1e-3)
+
+
+def _bipolar(key, shape):
+    return jnp.where(jax.random.bernoulli(key, shape=shape), 1.0, -1.0)
+
+
+@pytest.mark.parametrize("n", [1, 3, 8, 50, 130])
+@pytest.mark.parametrize("act", ["identity", "abs"])
+def test_resonator_step_batch_matches_ref(n, act):
+    """Batched fused sweep == oracle at ragged N (row-tile padding included)."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n), 3)
+    F, M, D = 3, 12, 256
+    cbs = _bipolar(k1, (F, M, D))
+    qs = _bipolar(k2, (n, D))
+    est = _bipolar(k3, (n, F, D))
+    a_k, e_k = rsk.resonator_step_batch(qs, est, cbs, activation=act,
+                                        interpret=True)
+    a_r, e_r = rsr.resonator_step_batch_ref(qs, est, cbs, activation=act)
+    np.testing.assert_allclose(np.asarray(a_k), np.asarray(a_r), atol=1e-4)
+    assert bool((e_k == e_r).all())
+
+
+def test_resonator_step_scalar_wrapper_matches_batch_row():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    F, M, D = 3, 10, 256
+    cbs = _bipolar(k1, (F, M, D))
+    qs = _bipolar(k2, (4, D))
+    est = _bipolar(k3, (4, F, D))
+    a_b, e_b = rsk.resonator_step_batch(qs, est, cbs, interpret=True)
+    a_s, e_s = rsk.resonator_step(qs[2], est[2], cbs, interpret=True)
+    np.testing.assert_allclose(np.asarray(a_s), np.asarray(a_b[2]), atol=1e-4)
+    assert bool((e_s == e_b[2]).all())
 
 
 def test_similarity_int8_vs_fp32_accuracy():

@@ -1,5 +1,6 @@
 """adSCH scheduler invariants (hypothesis) + cogsim cycle-model checks."""
 import pytest
+pytest.importorskip("hypothesis")  # optional dep: skip, don't kill collection
 from hypothesis import given, settings, strategies as st
 
 from repro.cogsim import model as hw
