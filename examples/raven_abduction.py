@@ -72,10 +72,16 @@ def main():
     cands = jnp.stack([b["candidate_images"] for b in batches])
     answers = np.stack([b["answer"] for b in batches])
 
-    # adSCH-style pipelined stream: symbolic(t-1) || neural(t) in one XLA step
+    # adSCH-planned pipelined stream: the engine lowers the declared stage
+    # graph to one scan whose neural(t) || symbolic(t-1) lag is the
+    # scheduler's decision (replaces the deprecated pipelined_solve_scan)
+    from repro import engine
+    runner = engine.build_pipeline(
+        nvsa.stage_graph(params, cbs, mask, cfg, batch=args.batch))
+    print(f"adSCH plan: lags={runner.plan.lags} depth={runner.depth} "
+          f"(modeled gain {runner.plan.gains[0]:.2f}x)")
     t0 = time.perf_counter()
-    preds = nvsa.pipelined_solve_scan(params, imgs, cands, cbs, mask,
-                                      jax.random.PRNGKey(7), cfg)
+    preds = runner((imgs, cands), jax.random.PRNGKey(7))
     preds = np.asarray(jax.block_until_ready(preds))
     dt = time.perf_counter() - t0
     acc = (preds == answers).mean()

@@ -1,0 +1,61 @@
+"""jax version compatibility shims.
+
+The repo targets current jax but must degrade gracefully on 0.4.x (the
+container pins 0.4.37).  Three surfaces moved between versions:
+
+  * ``jax.sharding.AxisType`` (explicit-sharding mesh axis types) does not
+    exist before 0.5; ``jax.make_mesh`` grew the ``axis_types`` kwarg at the
+    same time.  ``make_mesh`` here passes axis_types only when available.
+  * ``jax.shard_map`` was promoted out of ``jax.experimental.shard_map`` and
+    renamed its replication-check kwarg (``check_rep`` -> ``check_vma``) and
+    grew ``axis_names``.  ``shard_map`` here accepts the NEW spelling and
+    translates down.
+  * ``Compiled.cost_analysis()`` historically returned a one-element list of
+    per-program dicts; current jax returns the dict directly.
+    ``cost_analysis`` normalises both to a dict.
+"""
+from __future__ import annotations
+
+import jax
+
+HAS_AXIS_TYPE = hasattr(jax.sharding, "AxisType")
+
+
+def make_mesh(axis_shapes, axis_names, *, devices=None):
+    """``jax.make_mesh`` with Auto axis types when the running jax has them."""
+    kw = {}
+    if devices is not None:
+        kw["devices"] = devices
+    if HAS_AXIS_TYPE:
+        kw["axis_types"] = (jax.sharding.AxisType.Auto,) * len(axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, **kw)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, axis_names=None):
+    """``jax.shard_map`` facade that also runs on jax 0.4.x.
+
+    Call with the current (keyword-only) spelling; on old jax this resolves to
+    ``jax.experimental.shard_map.shard_map`` with ``check_rep=check_vma`` and
+    drops ``axis_names`` (old shard_map always binds every mesh axis, which is
+    a superset of the restricted-axis behaviour — callers here only use
+    ``axis_names`` together with ``check_vma=False``, where it has no
+    functional effect).
+    """
+    if hasattr(jax, "shard_map"):
+        kw = {"check_vma": check_vma}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma)
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on every jax version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca) if ca else {}

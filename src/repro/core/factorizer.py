@@ -154,17 +154,58 @@ class _State(NamedTuple):
     it: jax.Array  # [] global sweep counter
 
 
-@partial(jax.jit, static_argnames=("cfg",))
-def _factorize_batched(qs: jax.Array, codebooks, keys: jax.Array,
-                       cfg: FactorizerConfig,
-                       valid_mask: jax.Array | None = None) -> FactorizerResult:
-    """Batch-native core: ONE while_loop over state [N, F, D].
+def sweep_cost_ops(cfg: FactorizerConfig, n: int) -> list:
+    """Scheduler cost hints for ONE resonator sweep over `n` queries.
 
-    Converged queries freeze via the per-query ``done`` mask; the batch keeps
-    sweeping until every query converged or ``max_iters``.  ``keys`` is one
-    PRNG key per query (so the stochasticity stream of query i is independent
-    of the batch it rides in — factorize(q_i, k_i) and row i of
-    factorize_batch agree exactly).
+    unbind -> codebook scores -> projection -> convergence check, sized per
+    the algebra: block-code unbinding is the circconv kernel the BS dataflow
+    accelerates; bipolar unbinding is elementwise SIMD work.  Lives here (not
+    in the engine) because it depends only on the factorizer shapes and the
+    ``core.scheduler`` Op vocabulary.
+    """
+    from repro.core.scheduler import Op
+    F, M, D = cfg.num_factors, cfg.codebook_size, cfg.vsa.dim
+    ops = []
+    if cfg.algebra == "unitary":
+        ops.append(Op("unbind", "circconv", (n * F * cfg.vsa.blocks,
+                                             cfg.vsa.lanes), symbolic=True))
+    else:
+        ops.append(Op("unbind", "simd", (n * F * D,), symbolic=True))
+    ops.append(Op("scores", "gemm", (n * F, D, M), deps=("unbind",),
+                  symbolic=True))
+    ops.append(Op("project", "gemm", (n * F, M, D), deps=("scores",),
+                  symbolic=True))
+    ops.append(Op("converge", "simd", (n * D,), deps=("project",),
+                  symbolic=True))
+    return ops
+
+
+class Resonator(NamedTuple):
+    """Stepwise resonator machinery over a fixed codebook set.
+
+    All members are pure-jax closures over (codebooks, cfg, valid_mask),
+    shared bit-for-bit by the one-shot :func:`factorize_batch` while_loop and
+    by :class:`repro.engine.Engine`'s continuous-batching sweeps (which
+    interleave host-side slot retirement between bursts of sweeps).
+    """
+
+    init: "object"  # (qs [N, D], keys [N, ...]) -> _State
+    sweep: "object"  # (qs, state) -> state      one full factor sweep + freeze
+    active: "object"  # (state) -> [N] bool      rows that still make progress
+    decode: "object"  # (qs, state) -> FactorizerResult
+    refill: "object"  # (qs, state, slot, q, key) -> (qs, state)  slot a query
+    refill_many: "object"  # (qs, state, slots [K], qs [K, D], keys [K, ...])
+
+
+def make_resonator(codebooks, cfg: FactorizerConfig,
+                   valid_mask: jax.Array | None = None) -> Resonator:
+    """Build the sweep machinery for one codebook set (see :class:`Resonator`).
+
+    A query row freezes once it converges (``done``) or exhausts its
+    per-query iteration budget — the loop condition is per-row, so rows
+    slotted in at different times (engine serving) each get the full
+    ``cfg.max_iters`` budget and an identical stochasticity stream to a solo
+    :func:`factorize` call with the same key.
     """
     vcfg = cfg.vsa
     dense_cb = codebooks.dequantize() if isinstance(codebooks, QTensor) else codebooks
@@ -175,12 +216,15 @@ def _factorize_batched(qs: jax.Array, codebooks, keys: jax.Array,
         valid_mask = jnp.ones(dense_cb.shape[:2], dtype=bool)
     neg = jnp.asarray(-1e9, jnp.float32)
 
-    N = qs.shape[0]
     F, M, D = dense_cb.shape
     use_int8_kernel = (isinstance(codebooks, QTensor)
                        and codebooks.values.dtype == jnp.int8)
+    # Superposition init: bundle of all (valid) atoms == zero-information
+    # estimate, identical for every query.
+    init_est = _norm(jnp.einsum("fm,fmd->fd", valid_mask.astype(dense_cb.dtype),
+                                dense_cb), cfg)
 
-    def factor_update(i: int, est: jax.Array, k_sim, k_proj):
+    def factor_update(qs, i: int, est: jax.Array, k_sim, k_proj):
         """One factor's unbind -> score -> project update for the whole batch;
         returns (alpha_i [N, M], new_est_i [N, D])."""
         unbound = _unbind(qs, est, cfg, factor=i)  # [N, D]      (Step 1)
@@ -216,7 +260,10 @@ def _factorize_batched(qs: jax.Array, codebooks, keys: jax.Array,
                  # padded codebook would leak invalid atoms into the estimates
                  and no_mask)
 
-    def step(s: _State) -> _State:
+    def active(s: _State) -> jax.Array:
+        return jnp.logical_and(~s.done, s.iters < cfg.max_iters)
+
+    def sweep(qs, s: _State) -> _State:
         keys = jax.vmap(lambda k: jax.random.split(k, 2 * F + 2))(s.keys)
         k_next, k_restart = keys[:, -1], keys[:, -2]
         est = s.est
@@ -228,14 +275,15 @@ def _factorize_batched(qs: jax.Array, codebooks, keys: jax.Array,
                 qs, est, dense_cb, activation=cfg.activation)
         elif cfg.synchronous:  # Jacobi: all factors from the same snapshot
             snapshot = est
-            outs = [factor_update(i, snapshot, keys[:, 2 * i], keys[:, 2 * i + 1])
+            outs = [factor_update(qs, i, snapshot,
+                                  keys[:, 2 * i], keys[:, 2 * i + 1])
                     for i in range(F)]
             alpha = jnp.stack([o[0] for o in outs], axis=1)
             est = jnp.stack([o[1] for o in outs], axis=1)
         else:  # Gauss-Seidel: each factor sees the freshest estimates
             alphas = []
             for i in range(F):
-                alpha_i, est_i = factor_update(i, est, keys[:, 2 * i],
+                alpha_i, est_i = factor_update(qs, i, est, keys[:, 2 * i],
                                                keys[:, 2 * i + 1])
                 est = est.at[:, i].set(est_i)
                 alphas.append(alpha_i)
@@ -245,40 +293,80 @@ def _factorize_batched(qs: jax.Array, codebooks, keys: jax.Array,
         idx = jnp.argmax(alpha, axis=-1)  # [N, F]
         recon = bind_combo(dense_cb, idx, vcfg)  # [N, D]
         sim = vsa.similarity(recon, qs)  # [N]
-        active = ~s.done
-        # Freeze converged queries: their est/sim/iters stop evolving.
-        est = jnp.where(active[:, None, None], est, s.est)
-        sim = jnp.where(active, sim, s.sim)
-        iters = s.iters + active.astype(jnp.int32)
+        act = active(s)
+        # Freeze converged / budget-exhausted queries: est/sim/iters stop.
+        est = jnp.where(act[:, None, None], est, s.est)
+        sim = jnp.where(act, sim, s.sim)
+        iters = s.iters + act.astype(jnp.int32)
         done = s.done | (sim >= cfg.conv_threshold)
         if cfg.restart_every > 0:  # escape limit cycles by re-randomising
-            do_restart = jnp.logical_and(~done, iters % cfg.restart_every == 0)
+            do_restart = act & ~done & (iters % cfg.restart_every == 0)
             noise_est = _norm(jax.vmap(
                 lambda k: jax.random.normal(k, (F, D)))(k_restart), cfg)
             est = jnp.where(do_restart[:, None, None], noise_est, est)
         return _State(est, iters, done, sim, k_next, s.it + 1)
 
-    def cond(s: _State) -> jax.Array:
-        return jnp.logical_and(jnp.any(~s.done), s.it < cfg.max_iters)
+    def init(qs, keys) -> _State:
+        N = qs.shape[0]
+        k_loop = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
+        return _State(jnp.broadcast_to(init_est, (N, F, D)),
+                      jnp.zeros(N, jnp.int32), jnp.zeros(N, bool),
+                      jnp.full(N, -1.0, jnp.float32), k_loop, jnp.int32(0))
 
-    k_loop = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
-    # Superposition init: bundle of all (valid) atoms == zero-information
-    # estimate, identical for every query.
-    init_est = _norm(jnp.einsum("fm,fmd->fd", valid_mask.astype(dense_cb.dtype),
-                                dense_cb), cfg)
-    s0 = _State(jnp.broadcast_to(init_est, (N, F, D)),
-                jnp.zeros(N, jnp.int32), jnp.zeros(N, bool),
-                jnp.full(N, -1.0, jnp.float32), k_loop, jnp.int32(0))
-    s = jax.lax.while_loop(cond, step, s0)
+    def decode(qs, s: _State) -> FactorizerResult:
+        """Final decode from the (frozen) estimates."""
+        unbound = _unbind(qs, s.est, cfg)  # [N, F, D]
+        alpha = jnp.where(valid_mask[None],
+                          jnp.einsum("nfd,fmd->nfm", unbound, dense_cb), neg)
+        idx = jnp.argmax(alpha, axis=-1).astype(jnp.int32)
+        recon = bind_combo(dense_cb, idx, vcfg)
+        return FactorizerResult(idx, s.iters, s.done,
+                                vsa.similarity(recon, qs), alpha)
 
-    # Final decode from the converged estimates.
-    unbound = _unbind(qs, s.est, cfg)  # [N, F, D]
-    alpha = jnp.where(valid_mask[None],
-                      jnp.einsum("nfd,fmd->nfm", unbound, dense_cb), neg)
-    idx = jnp.argmax(alpha, axis=-1).astype(jnp.int32)
-    recon = bind_combo(dense_cb, idx, vcfg)
-    return FactorizerResult(idx, s.iters, s.done, vsa.similarity(recon, qs),
-                            alpha)
+    def refill_many(qs, s: _State, slots, new_qs, keys):
+        """Slot fresh queries into rows ``slots`` (engine continuous batching).
+
+        ``slots`` is int32 [K]; out-of-range entries (== N) are DROPPED, so
+        the engine can pad a variable fill count to a fixed shape and reuse
+        one compiled program.  The key treatment mirrors :func:`init`, so a
+        refilled row's stochasticity stream matches a solo
+        ``factorize(q, key)`` exactly.
+        """
+        k_loop = jax.vmap(lambda k: jax.random.split(k)[1])(keys)
+        K = slots.shape[0]
+        drop = {"mode": "drop"}
+        return qs.at[slots].set(new_qs, **drop), _State(
+            s.est.at[slots].set(jnp.broadcast_to(init_est, (K,) + init_est.shape),
+                                **drop),
+            s.iters.at[slots].set(0, **drop),
+            s.done.at[slots].set(False, **drop),
+            s.sim.at[slots].set(-1.0, **drop),
+            s.keys.at[slots].set(k_loop, **drop),
+            s.it)
+
+    def refill(qs, s: _State, slot, q, key):
+        """Single-slot :func:`refill_many`."""
+        return refill_many(qs, s, jnp.asarray(slot)[None], q[None], key[None])
+
+    return Resonator(init, sweep, active, decode, refill, refill_many)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def _factorize_batched(qs: jax.Array, codebooks, keys: jax.Array,
+                       cfg: FactorizerConfig,
+                       valid_mask: jax.Array | None = None) -> FactorizerResult:
+    """Batch-native core: ONE while_loop over state [N, F, D].
+
+    Converged queries freeze via the per-query ``done`` mask; the batch keeps
+    sweeping until every query converged or ``max_iters``.  ``keys`` is one
+    PRNG key per query (so the stochasticity stream of query i is independent
+    of the batch it rides in — factorize(q_i, k_i) and row i of
+    factorize_batch agree exactly).
+    """
+    rs = make_resonator(codebooks, cfg, valid_mask)
+    s = jax.lax.while_loop(lambda s: jnp.any(rs.active(s)),
+                           lambda s: rs.sweep(qs, s), rs.init(qs, keys))
+    return rs.decode(qs, s)
 
 
 def factorize(q: jax.Array, codebooks, key: jax.Array, cfg: FactorizerConfig,

@@ -1,0 +1,45 @@
+"""repro.engine — the unified CogSys serving API.
+
+Single public entry point for neurosymbolic inference (the system layer the
+paper's Sec. VI argues turns kernel speedups into end-to-end utilization):
+
+  * :class:`Stage` / :class:`StageGraph` — declare a pipeline's neural and
+    symbolic stages with shapes and adSCH cost hints;
+  * :func:`plan_interleave` / :func:`build_pipeline` — let the
+    ``core/scheduler`` list scheduler choose the lag/overlap structure and
+    lower the graph to one jitted software-pipelined scan;
+  * :class:`Engine` — ``submit()/step()/drain()`` continuous batching of
+    reasoning requests over the fixed-shape batch-native factorizer;
+  * :func:`repro.engine.registry.build` — instantiate registered workloads
+    (``nvsa_abduction``, ``lvrf_rows``, plus anything downstream registers).
+
+Typical request-level use::
+
+    from repro import engine
+    spec = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0))
+    eng = engine.Engine(spec, slots=64)
+    rid = eng.submit(row_vec)
+    done = eng.drain()
+
+Stream use (throughput pipelines)::
+
+    graph = nvsa.stage_graph(params, cbs, mask, cfg, batch=B)
+    runner = engine.build_pipeline(graph)   # depth chosen by adSCH
+    answers = runner((image_stream, cand_stream), key)
+"""
+from repro.engine import registry
+from repro.engine.build import (PipelinePlan, PipelineRunner, build_pipeline,
+                                plan_interleave)
+from repro.engine.engine import (Engine, Request, derive_sweeps_per_step,
+                                 sweep_cost_ops)
+from repro.engine.registry import ServeSpec
+from repro.engine.stage import Stage, StageGraph, graph_ops, stage_ops
+
+from repro.engine import pipelines as _builtin  # noqa: F401  (registers built-ins)
+
+__all__ = [
+    "Engine", "Request", "ServeSpec", "Stage", "StageGraph",
+    "PipelinePlan", "PipelineRunner", "build_pipeline", "plan_interleave",
+    "derive_sweeps_per_step", "sweep_cost_ops", "graph_ops", "stage_ops",
+    "registry",
+]

@@ -1,0 +1,204 @@
+"""Lower a StageGraph to a jitted software-pipelined scan.
+
+The lag/overlap structure is *chosen by the adSCH scheduler*, not hard-coded:
+for every stage boundary, :func:`plan_interleave` asks
+:func:`repro.core.scheduler.schedule` (the paper's offline greedy list
+scheduler, Sec. VI) whether overlapping the downstream stages of task batch
+t-1 with the upstream stages of task batch t would beat running them
+sequentially on the modeled cell pool.  Boundaries with a real win get a
+one-batch lag (software pipelining inside one XLA program — the JAX analogue
+of Fig. 13b); boundaries without are fused into the same pipeline phase.
+
+The lowered runner executes ``K = depth`` phases as a fill/steady/drain
+pipeline: a Python-unrolled prologue primes the K-1 carried buffers, a
+``lax.scan`` runs the steady state (every phase busy, batches t..t-K+1 in
+flight in ONE program), and an unrolled epilogue drains the tail.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.cogsim import model as hw_model
+from repro.core import scheduler as sch
+from repro.engine.stage import Stage, StageGraph, stage_ops
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelinePlan:
+    """adSCH's verdict on a StageGraph's overlap structure."""
+
+    lags: tuple  # per stage boundary: 1 = pipelined (one-batch lag), 0 = fused
+    gains: tuple  # per boundary: sequential/interleaved makespan ratio
+    makespan_seq: float  # whole-graph, strict batch order
+    makespan_overlap: float  # whole-graph, adSCH interleaving
+
+    @property
+    def depth(self) -> int:
+        """Task batches concurrently in flight in the lowered scan."""
+        return 1 + sum(self.lags)
+
+
+def _makespan(ops, hw, interleave: bool) -> float:
+    return sch.schedule(ops, hw, interleave=interleave).makespan if ops else 0.0
+
+
+def plan_interleave(graph: StageGraph, hw=hw_model.COGSYS, *,
+                    min_gain: float = 1.05) -> PipelinePlan:
+    """Decide, per stage boundary, whether a one-batch lag pays off.
+
+    Boundary i separates stages[:i+1] from stages[i+1:].  With lag 1, one
+    pipeline step co-schedules ``tail(batch t-1)`` with ``head(batch t)`` —
+    so the decision is exactly the adSCH question: does the list scheduler
+    find enough idle cells during the head's neural blocks to hide the tail
+    (Fig. 13c), or does the overlap run no faster than sequential?  A
+    boundary is pipelined when the modeled speedup is >= ``min_gain``.
+    """
+    stages = graph.stages
+    lags, gains = [], []
+    for i in range(len(stages) - 1):
+        tail = stage_ops(stages[i + 1:], 0)  # symbolic tail of batch t-1
+        head = stage_ops(stages[:i + 1], 1)  # neural head of batch t
+        if not tail or not head:
+            lags.append(0)
+            gains.append(1.0)
+            continue
+        seq = _makespan(tail + head, hw, interleave=False)
+        over = _makespan(tail + head, hw, interleave=True)
+        gain = seq / over if over > 0 else 1.0
+        gains.append(gain)
+        lags.append(1 if gain >= min_gain else 0)
+    two = stage_ops(stages, 0) + stage_ops(stages, 1)
+    return PipelinePlan(tuple(lags), tuple(gains),
+                        makespan_seq=_makespan(two, hw, interleave=False),
+                        makespan_overlap=_makespan(two, hw, interleave=True))
+
+
+def _phase_groups(graph: StageGraph, plan: PipelinePlan) -> tuple:
+    """Group stages into pipeline phases: a new phase starts after every
+    boundary adSCH chose to pipeline."""
+    groups, cur = [], [graph.stages[0]]
+    for lag, st in zip(plan.lags, graph.stages[1:]):
+        if lag:
+            groups.append(tuple(cur))
+            cur = [st]
+        else:
+            cur.append(st)
+    groups.append(tuple(cur))
+    return tuple(groups)
+
+
+def _chain(stages) -> Callable:
+    def fn(x, key):
+        for st in stages:
+            x = st.fn(x, key)
+        return x
+    return fn
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineRunner:
+    """A lowered StageGraph: ``runner(xs, key) -> ys`` over a task-batch
+    stream (leading axis T on every leaf of ``xs``)."""
+
+    graph: StageGraph
+    plan: PipelinePlan
+    phase_names: tuple  # tuple[tuple[str, ...], ...]
+    _run: Callable
+
+    @property
+    def depth(self) -> int:
+        return self.plan.depth
+
+    def __call__(self, xs, key):
+        return self._run(xs, key)
+
+
+def build_pipeline(graph: StageGraph, *, hw=hw_model.COGSYS,
+                   plan: PipelinePlan | None = None,
+                   min_gain: float = 1.05, jit: bool = True) -> PipelineRunner:
+    """Lower ``graph`` to a jitted pipelined scan of scheduler-chosen depth.
+
+    Batch t's key is ``jax.random.split(key, T)[t]`` and is handed to every
+    stage of that batch, so a pipelined run is key-compatible with calling
+    the stage chain per batch (and with ``nvsa.solve``-style references).
+    """
+    if not graph.runnable:
+        raise ValueError(f"graph {graph.name!r} has cost-model-only stages")
+    plan = plan if plan is not None else plan_interleave(graph, hw,
+                                                        min_gain=min_gain)
+    groups = _phase_groups(graph, plan)
+    phase_fns = [_chain(g) for g in groups]
+    K = len(phase_fns)
+
+    def run(xs, key):
+        T = jax.tree.leaves(xs)[0].shape[0]
+        keys = jax.random.split(key, T)
+        if K == 1:  # no boundary worth overlapping: plain sequential scan
+            def body(carry, xk):
+                x, k = xk
+                return carry, phase_fns[0](x, k)
+
+            _, ys = jax.lax.scan(body, 0, (xs, keys))
+            return ys
+
+        x_at = lambda t: jax.tree.map(lambda a: a[t], xs)
+        bufs: list = [None] * (K - 1)  # bufs[j] = (key, phase-j output)
+        drained: list = []
+
+        def part_step(s: int, bufs: list) -> list:
+            """One pipeline step outside the steady state: phase j works on
+            batch s-j when that batch exists."""
+            new_bufs = list(bufs)
+            for j in range(K - 1, -1, -1):
+                b = s - j
+                if not 0 <= b < T:
+                    continue
+                k_b, x_in = (keys[b], x_at(b)) if j == 0 else bufs[j - 1]
+                y = phase_fns[j](x_in, k_b)
+                if j < K - 1:
+                    new_bufs[j] = (k_b, y)
+                else:
+                    drained.append(y)
+            return new_bufs
+
+        for s in range(K - 1):  # prologue: prime the carried buffers
+            bufs = part_step(s, bufs)
+
+        ys_scan = None
+        if T - K + 1 > 0:  # steady state: all K phases busy per step
+
+            def body(bufs, xk):
+                x, k = xk
+                new = list(bufs)
+                prev = (k, phase_fns[0](x, k))
+                for j in range(1, K):
+                    k_j, x_j = bufs[j - 1]
+                    y_j = phase_fns[j](x_j, k_j)
+                    new[j - 1] = prev
+                    prev = (k_j, y_j)
+                return tuple(new), prev[1]
+
+            xs_tail = jax.tree.map(lambda a: a[K - 1:], xs)
+            bufs_t, ys_scan = jax.lax.scan(body, tuple(bufs),
+                                           (xs_tail, keys[K - 1:]))
+            bufs = list(bufs_t)
+
+        for s in range(max(T, K - 1), T + K - 1):  # epilogue: drain the pipe
+            bufs = part_step(s, bufs)
+
+        tail = jax.tree.map(lambda *ls: jnp.stack(ls), *drained) \
+            if drained else None
+        if ys_scan is None:
+            return tail
+        if tail is None:
+            return ys_scan
+        return jax.tree.map(lambda a, b: jnp.concatenate([a, b], axis=0),
+                            ys_scan, tail)
+
+    return PipelineRunner(graph, plan, tuple(tuple(s.name for s in g)
+                                             for g in groups),
+                          jax.jit(run) if jit else run)

@@ -1,0 +1,251 @@
+"""Request-level serving engine: continuous batching of reasoning queries.
+
+The symbolic analogue of LM decode slotting (launch/serve.py): the factorizer
+state is a fixed-shape ``[N, F, D]`` batch riding ONE while_loop program, and
+incoming factorization requests are slotted into rows as converged rows
+retire — so the batch never drains to the slowest query the way a
+batch-and-wait ``factorize_batch`` wave does.  Rows are fully independent in
+the resonator sweep (every op is row-elementwise or a row-batched matmul), so
+a request's trajectory — including its stochasticity stream — is bit-equal to
+a solo :func:`repro.core.factorizer.factorize` call with the same key,
+whichever slot and whichever sweep it lands on.
+
+How many sweeps run between host-side retirement scans is an adSCH decision,
+not a constant: :func:`derive_sweeps_per_step` prices one sweep of the full
+slot batch and the declared neural stage with the paper's analytic cell-pool
+model and picks the sweep burst that fits the neural overlap window
+(Sec. VI-B's interleave granularity).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cogsim import model as hw_model
+from repro.core import factorizer as fz
+from repro.core import scheduler as sch
+from repro.core.factorizer import sweep_cost_ops  # re-export (public API)
+from repro.engine.registry import ServeSpec
+from repro.engine.stage import stage_ops
+
+
+def derive_sweeps_per_step(spec: ServeSpec, slots: int,
+                           hw=hw_model.COGSYS) -> int:
+    """Sweep burst between retirement scans, from adSCH runtime estimates.
+
+    With a declared graph the burst is the number of symbolic sweeps that fit
+    the neural stages' makespan (the interleave window the hardware scheduler
+    fills, Fig. 13b).  Without one, a fixed burst of 8 amortizes the
+    host-side slotting scan.
+    """
+    t_sweep = sch.schedule(sweep_cost_ops(spec.cfg, slots), hw).makespan
+    if spec.graph is not None and t_sweep > 0:
+        neural = [st for st in spec.graph.stages if not st.symbolic]
+        n_ops = stage_ops(neural, 0) if neural else []
+        if n_ops:
+            t_neural = sch.schedule(n_ops, hw).makespan
+            return int(np.clip(round(t_neural / t_sweep), 1, 64))
+    return 8
+
+
+@dataclasses.dataclass
+class Request:
+    """One submitted reasoning request (1..k queries slotted independently)."""
+
+    id: int
+    queries: jax.Array  # [k, D]
+    keys: jax.Array  # [k, ...] one PRNG key per query
+    meta: Any
+    submit_time: float
+    submit_sweep: int
+    rows: list = dataclasses.field(default_factory=list)  # per-query results
+    result: Any = None  # postprocess output (or stacked FactorizerResult)
+    factorization: Any = None  # stacked FactorizerResult over the k queries
+    iterations: Any = None  # [k] int — matches a solo factorize() per query
+    done_time: float | None = None
+    done_sweep: int | None = None
+
+    @property
+    def num_queries(self) -> int:
+        return self.queries.shape[0]
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.done_time is None else \
+            self.done_time - self.submit_time
+
+
+class Engine:
+    """``submit()/step()/drain()`` continuous batching over one ServeSpec.
+
+    One Engine serves one registered pipeline (fixed codebook shapes keep the
+    sweep program static); NVSA abduction and LVRF row decoding run through
+    this same class — see :mod:`repro.engine.pipelines`.
+    """
+
+    def __init__(self, spec: ServeSpec, *, slots: int = 32,
+                 sweeps_per_step: int | None = None, hw=hw_model.COGSYS,
+                 key: jax.Array | None = None):
+        self.spec = spec
+        self.slots = slots
+        self.hw = hw
+        self.sweeps_per_step = (derive_sweeps_per_step(spec, slots, hw)
+                                if sweeps_per_step is None else sweeps_per_step)
+        rs = fz.make_resonator(spec.codebooks, spec.cfg, spec.valid_mask)
+        self._rs = rs
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        self.qs = jnp.zeros((slots, spec.dim), jnp.float32)
+        st = rs.init(self.qs, jax.random.split(jax.random.PRNGKey(0), slots))
+        self.state = st._replace(done=jnp.ones(slots, bool))  # all rows parked
+
+        def run_sweeps(qs, s, budget):
+            def cond(c):
+                s, n = c
+                return jnp.logical_and(n < budget, jnp.any(rs.active(s)))
+
+            def body(c):
+                s, n = c
+                return rs.sweep(qs, s), n + 1
+
+            return jax.lax.while_loop(cond, body, (s, jnp.int32(0)))
+
+        self._sweeps = jax.jit(run_sweeps)
+        self._refill_many = jax.jit(rs.refill_many)
+        self._decode = jax.jit(rs.decode)
+        self._owner: list = [None] * slots  # (request, query_index) | None
+        self._queue: deque = deque()
+        self._next_id = 0
+        self.completed: dict = {}
+        self.sweeps_total = 0
+        self.steps_total = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, queries, *, key=None, keys=None, meta=None) -> int:
+        """Enqueue a request of one or more query vectors; returns its id.
+
+        ``keys`` (one per query) pins the stochasticity streams — row i then
+        reproduces ``factorize(queries[i], keys[i])`` exactly.  Otherwise
+        keys derive from ``key`` (or the engine's internal chain).
+        """
+        queries = jnp.asarray(queries)
+        if queries.ndim == 1:
+            queries = queries[None]
+        k = queries.shape[0]
+        if keys is None:
+            if key is None:
+                self._key, key = jax.random.split(self._key)
+            keys = jax.random.split(key, k)
+        req = Request(self._next_id, queries, jnp.asarray(keys), meta,
+                      time.perf_counter(), self.sweeps_total)
+        req.rows = [None] * k
+        self._next_id += 1
+        for qi in range(k):
+            self._queue.append((req, qi))
+        return req.id
+
+    # -- serving loop ------------------------------------------------------
+
+    def _fill(self) -> None:
+        fills = []
+        for slot in range(self.slots):
+            if self._owner[slot] is not None or not self._queue:
+                continue
+            req, qi = self._queue.popleft()
+            self._owner[slot] = (req, qi)
+            fills.append((slot, req.queries[qi], req.keys[qi]))
+        if not fills:
+            return
+        # ONE fixed-shape jitted scatter for however many slots freed up:
+        # indices pad with `slots` (out of range -> dropped), so every fill
+        # count reuses the same compiled program.  The padded batch is
+        # assembled host-side — eager jnp.stack over a varying fill count
+        # would compile a fresh concatenate per distinct count.
+        idx = np.full(self.slots, self.slots, np.int32)
+        new_qs = np.zeros((self.slots, self.spec.dim), np.float32)
+        keys = np.zeros((self.slots,) + fills[0][2].shape,
+                        np.asarray(fills[0][2]).dtype)
+        for j, (slot, q, k) in enumerate(fills):
+            idx[j] = slot
+            new_qs[j] = np.asarray(q)
+            keys[j] = np.asarray(k)
+        self.qs, self.state = self._refill_many(
+            self.qs, self.state, jnp.asarray(idx), jnp.asarray(new_qs),
+            jnp.asarray(keys))
+
+    def _retire(self) -> list:
+        done = np.asarray(self.state.done)
+        iters = np.asarray(self.state.iters)
+        max_it = self.spec.cfg.max_iters
+        ripe = [s for s in range(self.slots)
+                if self._owner[s] is not None
+                and (done[s] or iters[s] >= max_it)]
+        if not ripe:
+            return []
+        res = jax.device_get(self._decode(self.qs, self.state))
+        finished = []
+        for s in ripe:
+            req, qi = self._owner[s]
+            self._owner[s] = None
+            req.rows[qi] = jax.tree.map(lambda a: a[s], res)
+            if all(r is not None for r in req.rows):
+                self._finalize(req)
+                finished.append(req)
+        return finished
+
+    def _finalize(self, req: Request) -> None:
+        req.factorization = jax.tree.map(lambda *r: np.stack(r), *req.rows)
+        req.iterations = req.factorization.iterations
+        req.done_time = time.perf_counter()
+        req.done_sweep = self.sweeps_total
+        req.result = req.factorization if self.spec.postprocess is None else \
+            self.spec.postprocess(req.queries, req.factorization, req.meta)
+        self.completed[req.id] = req
+
+    def step(self) -> list:
+        """Fill free slots, run one adSCH-sized sweep burst, retire converged
+        rows.  Returns the requests completed by this step."""
+        self._fill()
+        if all(o is None for o in self._owner):
+            return []
+        self.state, n = self._sweeps(self.qs, self.state,
+                                     jnp.int32(self.sweeps_per_step))
+        self.sweeps_total += int(n)
+        self.steps_total += 1
+        return self._retire()
+
+    def drain(self, max_steps: int = 100_000) -> list:
+        """Run until every submitted request completed; returns them all
+        (submission order)."""
+        out = []
+        for _ in range(max_steps):
+            if not self._queue and all(o is None for o in self._owner):
+                break
+            out += self.step()
+        else:
+            raise RuntimeError("drain() exceeded max_steps")
+        return sorted(out, key=lambda r: r.id)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def in_flight(self) -> int:
+        return sum(o is not None for o in self._owner) + len(self._queue)
+
+    def stats(self) -> dict:
+        lats = [r.latency_s for r in self.completed.values()]
+        return {
+            "slots": self.slots,
+            "sweeps_per_step": self.sweeps_per_step,
+            "steps": self.steps_total,
+            "sweeps_total": self.sweeps_total,
+            "completed": len(self.completed),
+            "latency_p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
+            "latency_p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
+        }

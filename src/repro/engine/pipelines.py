@@ -1,0 +1,104 @@
+"""Built-in serving pipelines: NVSA RPM abduction and LVRF row decoding.
+
+Two deliberately different workloads behind the same ``Engine.submit/step/
+drain`` API — NVSA factorizes padded block-code attribute books (unitary
+algebra, F=3, M=10 padded, D=1024, stochastic Gauss-Seidel sweeps) and ranks
+RPM candidates through probabilistic abduction; LVRF decodes bipolar MAP row
+encodings against permutation-rolled value atoms (F=3, M=n_values, D=2048,
+deterministic).  The engine sees both as ServeSpecs; nothing in
+:mod:`repro.engine.engine` is NVSA-shaped.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import vsa
+from repro.core.scheduler import Op
+from repro.engine.registry import ServeSpec, register
+from repro.engine.stage import Stage, StageGraph
+from repro.models import lvrf as lvrf_mod
+from repro.models import nvsa as nvsa_mod
+
+
+@register("nvsa_abduction")
+def nvsa_abduction(key, *, cfg=None, params=None, batch: int = 8,
+                   expected_sweeps: int | None = None) -> ServeSpec:
+    """NVSA RPM abduction.
+
+    Engine requests: the 8 context-panel queries of one task ([8, D]), with
+    ``meta={"cand": [8, D]}`` candidate queries; the postprocess runs the
+    same beliefs -> abduce -> execute -> rank tail as :func:`nvsa.solve`.
+    With ``params`` (a trained CNN) the ServeSpec also carries the runnable
+    two-stage graph for stream serving.
+    """
+    cfg = cfg if cfg is not None else nvsa_mod.NVSAConfig()
+    cbs, mask = nvsa_mod.make_codebooks(key, cfg)
+    graph = nvsa_mod.stage_graph(params, cbs, mask, cfg, batch=batch,
+                                 expected_sweeps=expected_sweeps)
+
+    def postprocess(queries, res, meta):
+        beliefs = nvsa_mod.beliefs_from_scores(
+            jnp.asarray(queries), jnp.asarray(res.scores), mask, cfg)
+        out = {"indices": res.indices, "iterations": res.iterations,
+               "converged": res.converged, "beliefs": beliefs}
+        if meta is not None and "cand" in meta:
+            answer, sims = nvsa_mod.abduce_answers(
+                beliefs[None], jnp.asarray(meta["cand"])[None], cbs, cfg)
+            out["answer"] = int(answer[0])
+            out["sims"] = sims[0]
+        return out
+
+    return ServeSpec("nvsa_abduction", cbs, cfg.factorizer, mask, graph,
+                     postprocess)
+
+
+@register("lvrf_rows")
+def lvrf_rows(key, *, cfg=None, rules=("constant", "progression_p1",
+                                       "distribute_three"),
+              examples: int = 32, max_iters: int = 40,
+              batch: int = 32) -> ServeSpec:
+    """LVRF: decode row encodings and serve rule abduction/execution.
+
+    Engine requests: row vectors [k, D] (products of permuted value atoms);
+    results decode back to the (v1, v2, v3) values.  The stream graph
+    encodes observed rows then scores them against the one-shot-learned rule
+    codebook and executes the abduced rule over candidate completions.
+    """
+    cfg = cfg if cfg is not None else lvrf_mod.LVRFConfig()
+    k_atoms, _ = jax.random.split(jnp.asarray(key))
+    atoms = lvrf_mod.init_atoms(k_atoms, cfg)
+    cbs = lvrf_mod.row_codebooks(atoms, cfg)
+    fcfg = lvrf_mod.row_factorizer_config(cfg, max_iters=max_iters)
+    rows = lvrf_mod.make_rule_examples(np.random.default_rng(0), list(rules),
+                                       cfg.n_values, examples)
+    rule_vecs = lvrf_mod.learn_rules(atoms, jnp.asarray(rows), cfg)
+    R, D, n = len(rules), cfg.vsa.dim, cfg.n_values
+
+    def encode_fn(xs, key):
+        return lvrf_mod.encode_row(atoms, xs["rows"], cfg), xs["prefix"]
+
+    def abduce_fn(x, key):
+        enc, prefix = x  # [B, K, D], [B, 2]
+        sims = vsa.similarity(enc[:, :, None, :], rule_vecs)  # [B, K, R]
+        post = jax.nn.softmax(sims.sum(1) * 8.0, axis=-1)
+        return lvrf_mod.execute(atoms, rule_vecs, post, prefix, cfg)
+
+    graph = StageGraph("lvrf_rows", (
+        Stage("encode", encode_fn, symbolic=False, cost_ops=(
+            Op("enc_bind", "simd", (batch * 2 * 3 * D,)),)),
+        Stage("abduce", abduce_fn, symbolic=True, cost_ops=(
+            Op("rule_sims", "gemm", (batch * 2, D, R), symbolic=True),
+            Op("execute", "gemm", (batch * n, D, R), deps=("rule_sims",),
+               symbolic=True),
+            Op("rank", "simd", (batch * n * R,), deps=("execute",),
+               symbolic=True),)),
+    ))
+
+    def postprocess(queries, res, meta):
+        return {"values": res.indices, "iterations": res.iterations,
+                "converged": res.converged,
+                "reconstruction_sim": res.reconstruction_sim}
+
+    return ServeSpec("lvrf_rows", cbs, fcfg, None, graph, postprocess)

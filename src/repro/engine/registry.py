@@ -1,0 +1,71 @@
+"""Pipeline registry: named neurosymbolic workloads the engine can serve.
+
+A registered builder returns a :class:`ServeSpec` — everything the request
+engine and the stream lowering need to run one workload:
+
+  * the factorizer-kernel side (codebooks / FactorizerConfig / validity mask)
+    that requests are slotted against,
+  * an optional :class:`repro.engine.stage.StageGraph` for stream serving and
+    for adSCH cost estimates,
+  * an optional ``postprocess`` turning a completed request's factorization
+    results into the workload's answer (NVSA: abduce+execute+rank; LVRF:
+    decoded row values + consistency flag).
+
+Builders are registered at import time by :mod:`repro.engine.pipelines`;
+downstream code registers its own with :func:`register`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+from repro.core.factorizer import FactorizerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """One servable workload (see module docstring)."""
+
+    name: str
+    codebooks: Any  # [F, M, D] dense array or QTensor
+    cfg: FactorizerConfig
+    valid_mask: Any = None  # [F, M] bool or None
+    graph: Any = None  # StageGraph | None — stream lowering + cost estimates
+    # (queries [k, D], FactorizerResult over the k queries, meta) -> answer
+    postprocess: Callable | None = None
+
+    @property
+    def dim(self) -> int:
+        cb = self.codebooks
+        values = getattr(cb, "values", cb)
+        return values.shape[-1]
+
+
+_BUILDERS: dict = {}
+
+
+def register(name: str):
+    """Decorator: ``@register("nvsa_abduction")`` over a builder
+    ``(key, **kwargs) -> ServeSpec``."""
+
+    def deco(builder):
+        if name in _BUILDERS:
+            raise ValueError(f"pipeline {name!r} already registered")
+        _BUILDERS[name] = builder
+        return builder
+
+    return deco
+
+
+def available() -> tuple:
+    return tuple(sorted(_BUILDERS))
+
+
+def build(name: str, key, **kwargs) -> ServeSpec:
+    """Instantiate a registered pipeline's ServeSpec."""
+    try:
+        builder = _BUILDERS[name]
+    except KeyError:
+        raise KeyError(f"unknown pipeline {name!r}; "
+                       f"registered: {available()}") from None
+    return builder(key, **kwargs)

@@ -7,6 +7,8 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     import os
@@ -15,16 +17,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     if override and not multi_pod:
         shape = tuple(int(x) for x in override.split("x"))
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 4, model: int = 2):
     """Small mesh over host CPU devices for distribution tests."""
     n = len(jax.devices())
     data = min(data, max(1, n // model))
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model), ("data", "model"))
 
 
 # TPU v5e constants for the roofline (per chip).

@@ -30,23 +30,59 @@ class ServeEngine:
         self.slots = batch_slots
         self.active = np.zeros(batch_slots, bool)
         self.generated: list = [[] for _ in range(batch_slots)]
-        self._decode = jax.jit(lambda p, c, t: T.decode_step(p, cfg, c, t))
+        # One decode step with the active-slot select fused into the jitted
+        # program: inactive slots keep their old cache rows (their dummy
+        # token must not advance the KV length a later add_request prefills
+        # against), and no eager full-cache copy happens per token.  Every
+        # cache leaf is [periods, batch, ...] (see T.init_cache).
+        def decode_masked(p, c, tok, act):
+            logits, new = T.decode_step(p, cfg, c, tok)
+            merged = jax.tree.map(
+                lambda o, n: jnp.where(
+                    act.reshape((1, batch_slots) + (1,) * (o.ndim - 2)), n, o),
+                c, new)
+            return logits, merged
+
+        self._decode = jax.jit(decode_masked)
+        # Prefill one token into ONE slot: decode the whole (static-shape)
+        # batch but write back only the target slot's row.
+        self._prefill = jax.jit(lambda p, c, tok, slot: decode_masked(
+            p, c, jnp.broadcast_to(tok, (batch_slots, 1)).astype(jnp.int32),
+            jnp.arange(batch_slots) == slot))
+        # Pristine per-slot state for slot reuse (xLSTM stabilizer rows init
+        # to -1e9, so "reset" must slice from a fresh cache, not zero).
+        self._fresh_cache = T.init_cache(cfg, batch_slots, max_len)
 
     def add_request(self, slot: int, prompt: jnp.ndarray):
-        """Prefill a prompt into one slot by streaming tokens (simple path)."""
-        for t in range(prompt.shape[0]):
-            logits, self.cache = self._decode(
-                self.params, self.cache, jnp.broadcast_to(
-                    prompt[t], (self.slots, 1)).astype(jnp.int32))
+        """Prefill a prompt into one slot by streaming tokens (simple path).
+
+        The slot's cache row is reset first (slots are reused across
+        requests).  Only ``prompt[:-1]`` is prefilled; the last prompt token
+        is seeded into ``generated`` so the next ``step()`` feeds it —
+        writing its KV exactly once and producing the true first next-token
+        logits.  Returns the target slot's logits after the last *prefilled*
+        token (``None`` for prompts shorter than 2 tokens).
+        """
+        if prompt.shape[0] == 0:  # nothing to serve; leave the slot parked
+            return None
+        self.cache = jax.tree.map(
+            lambda c, f: c.at[:, slot].set(f[:, slot]),
+            self.cache, self._fresh_cache)
+        logits = None
+        for t in range(prompt.shape[0] - 1):
+            logits, self.cache = self._prefill(
+                self.params, self.cache, prompt[t], jnp.int32(slot))
         self.active[slot] = True
-        return logits
+        self.generated[slot] = [int(prompt[-1])]
+        return None if logits is None else logits[slot]
 
     def step(self, sampler="greedy", temperature=1.0, key=None):
-        """One decode step for the whole batch; returns sampled tokens."""
+        """One decode step for the active slots; returns sampled tokens."""
         last = jnp.asarray([
             self.generated[s][-1] if self.generated[s] else 0
             for s in range(self.slots)], dtype=jnp.int32)[:, None]
-        logits, self.cache = self._decode(self.params, self.cache, last)
+        logits, self.cache = self._decode(self.params, self.cache, last,
+                                          jnp.asarray(self.active))
         if sampler == "greedy":
             nxt = jnp.argmax(logits[:, -1], axis=-1)
         else:
@@ -74,10 +110,8 @@ def main():
     eng = ServeEngine(cfg, params, args.batch, args.prompt_len + args.gen + 1)
     prompt = jax.random.randint(key, (args.prompt_len,), 0, cfg.vocab)
     t0 = time.perf_counter()
-    eng.add_request(0, prompt)
     for s in range(args.batch):
-        eng.active[s] = True
-        eng.generated[s] = [int(prompt[-1])]
+        eng.add_request(s, prompt)
     prefill_t = time.perf_counter() - t0
     t0 = time.perf_counter()
     for _ in range(args.gen):

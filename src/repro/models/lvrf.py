@@ -49,6 +49,30 @@ def encode_row(atoms: dict, values: jax.Array, cfg: LVRFConfig) -> jax.Array:
     return jnp.prod(rolled, axis=-2)
 
 
+def row_codebooks(atoms: dict, cfg: LVRFConfig) -> jax.Array:
+    """Factorizer codebooks [3, n_values, D] for decoding row encodings.
+
+    Position i's codebook holds the value atoms pre-rolled by that slot's
+    permutation, so binding one atom per factor reproduces
+    :func:`encode_row` exactly — decoding (v1, v2, v3) from a row vector is
+    then a standard 3-factor resonator problem the serving engine can slot
+    alongside any other workload (bipolar algebra, D = cfg.vsa.dim,
+    M = n_values; a very different shape from NVSA's padded block-code
+    attribute books, which is the point).
+    """
+    return jnp.stack([jnp.roll(atoms["values"], 17 * (i + 1), axis=-1)
+                      for i in range(3)])
+
+
+def row_factorizer_config(cfg: LVRFConfig, *, max_iters: int = 40,
+                          conv_threshold: float = 0.8):
+    """FactorizerConfig for :func:`row_codebooks` (MAP/bipolar, lanes == 1)."""
+    from repro.core import factorizer as fz
+    return fz.FactorizerConfig(
+        vsa=cfg.vsa, num_factors=3, codebook_size=cfg.n_values,
+        algebra="bipolar", max_iters=max_iters, conv_threshold=conv_threshold)
+
+
 def learn_rules(atoms: dict, rule_rows: jax.Array, cfg: LVRFConfig) -> jax.Array:
     """One-shot rule learning: bundle example-row encodings per rule.
 

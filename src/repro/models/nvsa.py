@@ -15,7 +15,6 @@ behind the next batch's neural layers.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -111,6 +110,21 @@ def perceive(params, images: jax.Array, cfg: NVSAConfig,
     return q.reshape(*images.shape[:-2], cfg.vsa.dim)
 
 
+def beliefs_from_scores(queries: jax.Array, scores: jax.Array, mask,
+                        cfg: NVSAConfig) -> jax.Array:
+    """Soft beliefs [N, F, M] from factorizer similarity scores.
+
+    Atoms are unit-norm and unbinding is norm-preserving, so dividing by the
+    query norm turns the raw dot products into cosines before the masked
+    softmax.  Shared by the in-process path and the engine's postprocess, so
+    both decode identical beliefs from identical factorizations.
+    """
+    qnorm = jnp.linalg.norm(queries, axis=-1)[:, None, None] + 1e-9
+    cos = scores / qnorm
+    return jax.nn.softmax(
+        jnp.where(mask[None], cfg.belief_temp * cos, -1e9), axis=-1)
+
+
 def beliefs_from_queries(queries: jax.Array, codebooks, mask, key, cfg: NVSAConfig):
     """Factorize query vectors [N, D] -> per-attribute beliefs + indices.
 
@@ -120,14 +134,44 @@ def beliefs_from_queries(queries: jax.Array, codebooks, mask, key, cfg: NVSAConf
     batched codebook passes instead of N separate resonator loops.
     """
     res = fz.factorize_batch(queries, codebooks, key, cfg.factorizer, mask)
-    # Soft beliefs from the final similarity scores.  Atoms are unit-norm and
-    # unbinding is norm-preserving, so dividing by the query norm turns the
-    # raw dot products into cosines before the masked softmax.
-    qnorm = jnp.linalg.norm(queries, axis=-1)[:, None, None] + 1e-9
-    cos = res.scores / qnorm
-    beliefs = jax.nn.softmax(
-        jnp.where(mask[None], cfg.belief_temp * cos, -1e9), axis=-1)
-    return beliefs, res
+    return beliefs_from_scores(queries, res.scores, mask, cfg), res
+
+
+def abduce_answers(beliefs: jax.Array, cand: jax.Array, codebooks,
+                   cfg: NVSAConfig) -> tuple:
+    """Probabilistic abduction tail, shared by every serving path.
+
+    beliefs [B, 8, F, MAX_M] (context panels), cand [B, 8, D] candidate
+    queries -> (answer [B], sims [B, 8]).  Per attribute: assemble the 3x3
+    belief grid (missing panel uniform), abduce the row rule, execute it,
+    bind the expected atoms into the predicted panel vector, rank candidates
+    by VSA similarity.
+    """
+    B = beliefs.shape[0]
+    pred_atoms = []
+    for a, n in enumerate(ATTR_SIZES):
+        g = beliefs[:, :, a, :n]  # [B, 8, n]
+        g = g / (g.sum(-1, keepdims=True) + 1e-9)
+        pad = jnp.full((B, 1, n), 1.0 / n)
+        grid = jnp.concatenate([g, pad], axis=1).reshape(B, 3, 3, n)
+        post = sym.abduce_rules(grid)
+        pred = sym.execute_rules(grid, post)  # [B, n]
+        # Expected atom under the predicted distribution.
+        pred_atoms.append(pred @ codebooks[a, :n])  # [B, D]
+    pred_q = vsa.bind_all(jnp.stack(pred_atoms), cfg.vsa)  # [B, D]
+    sims = vsa.similarity(pred_q[:, None, :], cand)  # [B, 8]
+    return jnp.argmax(sims, axis=-1), sims
+
+
+def answers_from_queries(ctx: jax.Array, cand: jax.Array, codebooks, mask,
+                         key, cfg: NVSAConfig) -> jax.Array:
+    """Symbolic stage: context/candidate queries [B, 8, D] -> answers [B]."""
+    B = ctx.shape[0]
+    beliefs, _ = beliefs_from_queries(
+        ctx.reshape(B * 8, -1), codebooks, mask, key, cfg)
+    beliefs = beliefs.reshape(B, 8, len(ATTR_SIZES), MAX_M)
+    answer, _ = abduce_answers(beliefs, cand, codebooks, cfg)
+    return answer
 
 
 def solve(params, batch, codebooks, mask, key, cfg: NVSAConfig) -> dict:
@@ -143,26 +187,7 @@ def solve(params, batch, codebooks, mask, key, cfg: NVSAConfig) -> dict:
     ctx_beliefs, ctx_res = beliefs_from_queries(
         ctx.reshape(B * 8, -1), codebooks, mask, k1, cfg)
     ctx_beliefs = ctx_beliefs.reshape(B, 8, len(ATTR_SIZES), MAX_M)
-
-    # Assemble per-attribute 3x3 grids (last panel belief unused -> uniform).
-    answers_total = jnp.zeros((B, 8))
-    grids = {}
-    for a, n in enumerate(ATTR_SIZES):
-        g = ctx_beliefs[:, :, a, :n]  # [B, 8, n]
-        g = g / (g.sum(-1, keepdims=True) + 1e-9)
-        pad = jnp.full((B, 1, n), 1.0 / n)
-        grids[a] = jnp.concatenate([g, pad], axis=1).reshape(B, 3, 3, n)
-    # Abduce + execute per attribute, score candidates in VSA space.
-    pred_atoms = []
-    for a, n in enumerate(ATTR_SIZES):
-        post = sym.abduce_rules(grids[a])
-        pred = sym.execute_rules(grids[a], post)  # [B, n]
-        # Expected atom under the predicted distribution.
-        atoms = codebooks[a, :n]  # [n, D]
-        pred_atoms.append(pred @ atoms)  # [B, D]
-    pred_q = vsa.bind_all(jnp.stack(pred_atoms), cfg.vsa)  # [B, D] predicted panel
-    sims = vsa.similarity(pred_q[:, None, :], cand)  # [B, 8]
-    answer = jnp.argmax(sims, axis=-1)
+    answer, sims = abduce_answers(ctx_beliefs, cand, codebooks, cfg)
     iters = ctx_res.iterations.reshape(B, 8)  # per query, not batch-max
     return {"answer": answer, "sims": sims,
             "fact_iters": iters,
@@ -177,54 +202,115 @@ def accuracy(params, batch, codebooks, mask, key, cfg: NVSAConfig) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# adSCH software analogue: two-stage pipelined solver
+# adSCH software analogue: scheduler-planned stage graph
 # ---------------------------------------------------------------------------
 
-@partial(jax.jit, static_argnames=("cfg",))
+def _neural_cost_ops(cfg: NVSAConfig, batch: int) -> tuple:
+    """Scheduler hints for the CNN stage: 16 panels (8 ctx + 8 cand) per task.
+
+    conv2d dims are the im2col (m, k, n): m = panels * out_pixels,
+    k = 3*3*c_in, n = c_out (stride-2 convs halve the map each layer).
+    """
+    from repro.core.scheduler import Op
+    panels = batch * 16
+    ops, c_in, hw_px = [], 1, cfg.cnn.img
+    prev = ()
+    for i, c in enumerate(cfg.cnn.channels):
+        hw_px = max(1, hw_px // 2)
+        op = Op(f"conv{i}", "conv2d",
+                (panels * hw_px * hw_px, cfg.cnn.kernel ** 2 * c_in, c),
+                deps=prev)
+        ops.append(op)
+        prev = (op.name,)
+        c_in = c
+    ops.append(Op("head", "gemm", (panels, c_in, cfg.cnn.head_hidden),
+                  deps=prev))
+    ops.append(Op("head_vsa", "gemm",
+                  (panels, cfg.cnn.head_hidden, cfg.vsa.dim), deps=("head",)))
+    return tuple(ops)
+
+
+def _symbolic_cost_ops(cfg: NVSAConfig, batch: int,
+                       expected_sweeps: int | None = None) -> tuple:
+    """Scheduler hints for factorize+abduce: ``expected_sweeps`` resonator
+    sweeps over the task batch's 8*B queries, then the abduction SIMD tail.
+
+    The loop is unrolled into sweep-granular chained ops (the list scheduler
+    has no loop construct): that granularity is what lets adSCH slot
+    individual sweeps into the neural stage's idle-cell windows (Fig. 13c) —
+    one fused whole-loop op would be indivisible and land on crumbs.
+    """
+    from repro.core.factorizer import sweep_cost_ops
+    from repro.core.scheduler import Op
+    fcfg = cfg.factorizer
+    sweeps = expected_sweeps if expected_sweeps is not None else \
+        max(1, fcfg.max_iters // 3)  # observed mean convergence ~ max/3
+    ops = []
+    prev = ()
+    for s in range(sweeps):
+        for op in sweep_cost_ops(fcfg, batch * 8):
+            op = dataclasses.replace(
+                op, name=f"{op.name}_s{s}",
+                deps=tuple(f"{d}_s{s}" for d in op.deps) or prev)
+            ops.append(op)
+            prev = (op.name,)
+    ops.append(Op("abduce", "simd", (batch * 3 * 9 * MAX_M * 8,),
+                  deps=prev, symbolic=True))
+    return tuple(ops)
+
+
+def stage_graph(params, codebooks, mask, cfg: NVSAConfig, *, batch: int,
+                expected_sweeps: int | None = None):
+    """The NVSA RPM pipeline as an engine StageGraph.
+
+    Stage fns take one task batch ``(images [B, 9, H, W], cands [B, 8, H, W])``
+    and thread ``(ctx, cand)`` query vectors to the symbolic stage; the
+    symbolic stage derives its factorizer key exactly like :func:`solve`
+    (first half of ``split(key)``), so a pipelined run is bit-comparable to
+    per-batch ``solve`` calls sharing the same per-batch keys.  With
+    ``params=None`` the graph is cost-model-only (usable for planning).
+    """
+    from repro.engine.stage import Stage, StageGraph
+
+    def neural_fn(xs, key):
+        imgs, cands = xs
+        return (perceive(params, imgs[:, :8], cfg, codebooks),
+                perceive(params, cands, cfg, codebooks))
+
+    def symbolic_fn(x, key):
+        ctx, cand = x
+        k1, _ = jax.random.split(key)
+        return answers_from_queries(ctx, cand, codebooks, mask, k1, cfg)
+
+    return StageGraph("nvsa_rpm", (
+        Stage("perceive", neural_fn if params is not None else None,
+              symbolic=False, cost_ops=_neural_cost_ops(cfg, batch)),
+        Stage("abduce", symbolic_fn if params is not None else None,
+              symbolic=True,
+              cost_ops=_symbolic_cost_ops(cfg, batch, expected_sweeps)),
+    ))
+
+
 def pipelined_solve_scan(params, image_stream, cand_stream, codebooks, mask,
                          key, cfg: NVSAConfig):
-    """Process a stream of task batches with neural/symbolic overlap.
+    """DEPRECATED: use ``repro.engine.build_pipeline(nvsa.stage_graph(...))``.
 
-    image_stream: [T, B, 9, H, W]; cand_stream: [T, B, 8, H, W].
-    Step t's carry holds batch t-1's query vectors, so the (memory-bound)
-    symbolic stage of t-1 and the (compute-bound) neural stage of t sit in
-    one XLA program — giving the compiler the same overlap freedom adSCH
-    exploits in hardware (Sec. VI-B), and on a mesh letting the symbolic
-    kernels shard onto otherwise-idle devices.
+    Kept as a thin compatibility wrapper over the engine's lowered scan.  The
+    neural(t)/symbolic(t-1) overlap this function used to hard-code as a
+    one-batch lag is now *decided* by the adSCH planner from the stage cost
+    hints (:func:`repro.engine.build.plan_interleave`), and batch t's key is
+    ``split(key, T)[t]`` — matching per-batch :func:`solve` calls instead of
+    the old chained-key stream.
+
+    image_stream: [T, B, 9, H, W]; cand_stream: [T, B, 8, H, W] -> [T, B].
     """
+    import warnings
+
+    from repro.engine.build import build_pipeline
+    warnings.warn(
+        "nvsa.pipelined_solve_scan is deprecated; build the pipeline via "
+        "repro.engine.build_pipeline(nvsa.stage_graph(...)) instead",
+        DeprecationWarning, stacklevel=2)
     B = image_stream.shape[1]
-    D = cfg.vsa.dim
-
-    def stage_neural(imgs, cands):
-        return perceive(params, imgs[:, :8], cfg, codebooks), \
-            perceive(params, cands, cfg, codebooks)
-
-    def stage_symbolic(ctx, cand, k):
-        beliefs, res = beliefs_from_queries(ctx.reshape(B * 8, -1), codebooks, mask, k, cfg)
-        beliefs = beliefs.reshape(B, 8, len(ATTR_SIZES), MAX_M)
-        pred_atoms = []
-        for a, n in enumerate(ATTR_SIZES):
-            g = beliefs[:, :, a, :n]
-            g = g / (g.sum(-1, keepdims=True) + 1e-9)
-            pad = jnp.full((B, 1, n), 1.0 / n)
-            grid = jnp.concatenate([g, pad], axis=1).reshape(B, 3, 3, n)
-            post = sym.abduce_rules(grid)
-            pred = sym.execute_rules(grid, post)
-            pred_atoms.append(pred @ codebooks[a, :n])
-        pred_q = vsa.bind_all(jnp.stack(pred_atoms), cfg.vsa)
-        return jnp.argmax(vsa.similarity(pred_q[:, None, :], cand), axis=-1)
-
-    def step(carry, xs):
-        prev_ctx, prev_cand, k = carry
-        imgs, cands = xs
-        k, k_sym = jax.random.split(k)
-        ans_prev = stage_symbolic(prev_ctx, prev_cand, k_sym)  # symbolic(t-1)
-        ctx, cand = stage_neural(imgs, cands)  # neural(t) — same XLA step
-        return (ctx, cand, k), ans_prev
-
-    ctx0, cand0 = stage_neural(image_stream[0], cand_stream[0])
-    (ctx_l, cand_l, k), answers = jax.lax.scan(
-        step, (ctx0, cand0, key), (image_stream[1:], cand_stream[1:]))
-    k, k_last = jax.random.split(k)
-    last = stage_symbolic(ctx_l, cand_l, k_last)
-    return jnp.concatenate([answers, last[None]], axis=0)  # [T, B]
+    runner = build_pipeline(stage_graph(params, codebooks, mask, cfg, batch=B))
+    return runner((image_stream, cand_stream), key)  # [T, B]

@@ -241,29 +241,31 @@ def attention_decode(p, x, cache: dict, cfg: AttnConfig, positions) -> tuple:
     """
     B = x.shape[0]
     q, k_new, v_new = _qkv(p, x, cfg, positions)
-    pos = cache["len"][0]
+    pos = cache["len"]  # [B] — rows may sit at different lengths under
+    # continuous batching (per-slot prefill), so writes and masks are per-row
+    rows = jnp.arange(B)
     quantized = cache["k"].dtype == jnp.int8
     new_cache = dict(cache)
     if quantized:
         kq, ks = _quant_kv(k_new)
         vq, vs = _quant_kv(v_new)
         for name, val in (("k", kq), ("v", vq), ("k_scale", ks), ("v_scale", vs)):
-            new_cache[name] = jax.lax.dynamic_update_slice(
-                cache[name], val.astype(cache[name].dtype), (0, pos, 0, 0))
+            new_cache[name] = cache[name].at[rows, pos].set(
+                val[:, 0].astype(cache[name].dtype))
         k = new_cache["k"].astype(jnp.float32) * new_cache["k_scale"]
         v = new_cache["v"].astype(jnp.float32) * new_cache["v_scale"]
     else:
         for name, val in (("k", k_new), ("v", v_new)):
-            new_cache[name] = jax.lax.dynamic_update_slice(
-                cache[name], val.astype(cache[name].dtype), (0, pos, 0, 0))
+            new_cache[name] = cache[name].at[rows, pos].set(
+                val[:, 0].astype(cache[name].dtype))
         k, v = new_cache["k"], new_cache["v"]
     Smax, G = k.shape[1], k.shape[2]
     rep = cfg.n_heads // G
     scale = cfg.dh ** -0.5
     qf = (q.astype(jnp.float32) * scale).reshape(B, 1, G, rep, cfg.dh)
     s = jnp.einsum("bqgrd,bkgd->bqgrk", qf, k.astype(jnp.float32))
-    valid = jnp.arange(Smax)[None, :] <= pos
-    s = jnp.where(valid[:, None, None, None, :][0][None], s, -1e30)
+    valid = jnp.arange(Smax)[None, :] <= pos[:, None]  # [B, Smax]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bqgrk,bkgd->bqgrd", w, v.astype(jnp.float32))
     out = out.reshape(B, 1, cfg.n_heads * cfg.dh).astype(x.dtype)

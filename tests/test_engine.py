@@ -1,0 +1,262 @@
+"""Engine serving tests: StageGraph lowering, adSCH planning, continuous
+batching invariants, and parity with the in-process solve paths."""
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import engine
+from repro.core import factorizer as fz
+from repro.core.scheduler import Op
+from repro.engine.build import PipelinePlan, build_pipeline, plan_interleave
+from repro.engine.stage import Stage, StageGraph
+from repro.models import cnn, lvrf, nvsa
+
+
+# ---------------------------------------------------------------------------
+# StageGraph lowering: scheduler-chosen lag respected, outputs exact
+# ---------------------------------------------------------------------------
+
+def _toy_graph(sym_dims=(2048, 256), n_sym=8):
+    """3-stage graph with closed-form fns (so any lowering is checkable)."""
+    sym_ops, prev = [], ()
+    for i in range(n_sym):  # a chain of sweeps, like the resonator loop
+        op = Op(f"c{i}", "circconv", sym_dims, deps=prev, symbolic=True)
+        sym_ops.append(op)
+        prev = (op.name,)
+    return StageGraph("toy", (
+        Stage("n1", lambda x, k: x * 2.0, symbolic=False,
+              cost_ops=(Op("g1", "gemm", (4096, 512, 512)),)),
+        Stage("n2", lambda x, k: x + 1.0, symbolic=False,
+              cost_ops=(Op("g2", "gemm", (4096, 512, 512)),)),
+        Stage("s1", lambda x, k: x * x, symbolic=True,
+              cost_ops=tuple(sym_ops)),
+    ))
+
+
+def _reference(graph, xs, key):
+    T = xs.shape[0]
+    keys = jax.random.split(key, T)
+    outs = []
+    for t in range(T):
+        x = xs[t]
+        for st in graph.stages:
+            x = st.fn(x, keys[t])
+        outs.append(x)
+    return jnp.stack(outs)
+
+
+@pytest.mark.parametrize("lags", [(0, 0), (1, 0), (0, 1), (1, 1)])
+def test_lowered_scan_matches_reference_at_every_depth(lags):
+    g = _toy_graph()
+    plan = PipelinePlan(lags, (1.0,) * len(lags), 0.0, 0.0)
+    runner = build_pipeline(g, plan=plan)
+    assert runner.depth == 1 + sum(lags)
+    assert sum(len(p) for p in runner.phase_names) == 3
+    xs = jax.random.normal(jax.random.PRNGKey(0), (5, 4, 8))
+    got = runner(xs, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(_reference(g, xs, jax.random.PRNGKey(1))))
+
+
+def test_lowered_scan_short_stream_deeper_than_T():
+    g = _toy_graph()
+    plan = PipelinePlan((1, 1), (1.0, 1.0), 0.0, 0.0)
+    runner = build_pipeline(g, plan=plan)  # depth 3 > T
+    xs = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8))
+    got = runner(xs, jax.random.PRNGKey(1))
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(_reference(g, xs, jax.random.PRNGKey(1))))
+
+
+def test_plan_interleave_is_cost_driven():
+    """The lag is an adSCH estimate, not a constant: a sweep-chained symbolic
+    tail that hides in the neural window gets a one-batch lag; a tail that
+    dwarfs the window (or one too tiny to pay for the reserved cell sliver)
+    does not."""
+    mid = plan_interleave(_toy_graph(sym_dims=(2048, 256), n_sym=8))
+    tiny = plan_interleave(_toy_graph(sym_dims=(64, 64), n_sym=1))
+    huge = plan_interleave(_toy_graph(sym_dims=(8192, 512), n_sym=8))
+    assert mid.lags[-1] == 1, mid
+    assert tiny.lags[-1] == 0, tiny
+    assert huge.lags[-1] == 0, huge
+    assert build_pipeline(_toy_graph((2048, 256), 8)).depth > \
+        build_pipeline(_toy_graph((8192, 512), 8)).depth
+
+
+def test_nvsa_plan_pipelines_the_neural_symbolic_boundary():
+    cfg = nvsa.NVSAConfig()
+    g = nvsa.stage_graph(None, None, None, cfg, batch=2)
+    assert not g.runnable  # cost-model-only graph still plannable
+    plan = plan_interleave(g)
+    assert plan.lags == (1,)
+    assert plan.gains[0] > 1.0
+
+
+# ---------------------------------------------------------------------------
+# NVSA through the engine: parity with solve()
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def nvsa_setup():
+    cfg = nvsa.NVSAConfig()
+    cbs, mask = nvsa.make_codebooks(jax.random.PRNGKey(0), cfg)
+    params = cnn.init(jax.random.PRNGKey(1), cfg.cnn)
+    return cfg, cbs, mask, params
+
+
+def test_pipelined_stream_bit_equals_per_batch_solve(nvsa_setup):
+    cfg, cbs, mask, params = nvsa_setup
+    B, T = 2, 3
+    runner = build_pipeline(nvsa.stage_graph(params, cbs, mask, cfg, batch=B))
+    assert runner.depth == 2  # scheduler-chosen one-batch lag
+    imgs = jax.random.uniform(jax.random.PRNGKey(2), (T, B, 9, 32, 32))
+    cands = jax.random.uniform(jax.random.PRNGKey(3), (T, B, 8, 32, 32))
+    got = np.asarray(runner((imgs, cands), jax.random.PRNGKey(7)))
+    keys = jax.random.split(jax.random.PRNGKey(7), T)
+    want = np.stack([np.asarray(nvsa.solve(
+        params, {"images": imgs[t], "candidate_images": cands[t]},
+        cbs, mask, keys[t], cfg)["answer"]) for t in range(T)])
+    np.testing.assert_array_equal(got, want)
+
+
+def test_pipelined_solve_scan_is_deprecated_wrapper(nvsa_setup):
+    cfg, cbs, mask, params = nvsa_setup
+    imgs = jax.random.uniform(jax.random.PRNGKey(2), (2, 1, 9, 32, 32))
+    cands = jax.random.uniform(jax.random.PRNGKey(3), (2, 1, 8, 32, 32))
+    with pytest.warns(DeprecationWarning):
+        ans = nvsa.pipelined_solve_scan(params, imgs, cands, cbs, mask,
+                                        jax.random.PRNGKey(5), cfg)
+    assert np.asarray(ans).shape == (2, 1)
+
+
+def test_engine_request_answers_bit_equal_solve(nvsa_setup):
+    """One RPM task through Engine.submit/drain == nvsa.solve, bit for bit,
+    even with fewer slots than queries (rows are independent)."""
+    cfg, cbs, mask, params = nvsa_setup
+    batch = {"images": jax.random.uniform(jax.random.PRNGKey(2), (1, 9, 32, 32)),
+             "candidate_images": jax.random.uniform(jax.random.PRNGKey(3),
+                                                    (1, 8, 32, 32))}
+    key = jax.random.PRNGKey(11)
+    want = nvsa.solve(params, batch, cbs, mask, key, cfg)
+
+    ctx = nvsa.perceive(params, batch["images"][:, :8], cfg, cbs)[0]  # [8, D]
+    cand = nvsa.perceive(params, batch["candidate_images"], cfg, cbs)[0]
+    k1, _ = jax.random.split(key)
+    qkeys = jax.random.split(k1, 8)  # solve's per-query key layout
+
+    spec = engine.registry.build("nvsa_abduction", jax.random.PRNGKey(0),
+                                 cfg=cfg, params=params, batch=1)
+    eng = engine.Engine(spec, slots=3)  # fewer slots than queries
+    eng.submit(ctx, keys=qkeys, meta={"cand": cand})
+    (req,) = eng.drain()
+    assert req.result["answer"] == int(want["answer"][0])
+    np.testing.assert_array_equal(req.iterations,
+                                  np.asarray(want["fact_iters"][0]))
+    np.testing.assert_allclose(np.asarray(req.result["sims"]),
+                               np.asarray(want["sims"][0]), rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching invariants (LVRF: second registered workload)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lvrf_setup():
+    spec = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0))
+    cfg = lvrf.LVRFConfig()
+    atoms = lvrf.init_atoms(jax.random.split(jax.random.PRNGKey(0))[0], cfg)
+    return spec, cfg, atoms
+
+
+def test_engine_serves_second_workload(lvrf_setup):
+    spec, cfg, atoms = lvrf_setup
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.integers(0, cfg.n_values, (6, 3)))
+    qs = lvrf.encode_row(atoms, vals, cfg)
+    eng = engine.Engine(spec, slots=4)
+    for i in range(6):
+        eng.submit(qs[i])
+    done = eng.drain()
+    got = np.stack([np.asarray(r.result["values"][0]) for r in done])
+    np.testing.assert_array_equal(got, np.asarray(vals))
+    assert all(bool(r.result["converged"].all()) for r in done)
+
+
+def test_slotting_invariants_no_starvation_and_refill(lvrf_setup):
+    """More requests than slots, including never-converging junk queries:
+    every request retires (no starvation), retired slots are refilled, and
+    junk rows stop at exactly max_iters."""
+    spec, cfg, atoms = lvrf_setup
+    rng = np.random.default_rng(1)
+    n_good, n_junk = 10, 3
+    vals = jnp.asarray(rng.integers(0, cfg.n_values, (n_good, 3)))
+    good = lvrf.encode_row(atoms, vals, cfg)
+    junk = jnp.asarray(rng.normal(size=(n_junk, cfg.vsa.dim)), jnp.float32)
+    eng = engine.Engine(spec, slots=4, sweeps_per_step=2)
+    ids = [eng.submit(good[i]) for i in range(n_good)]
+    ids += [eng.submit(junk[i]) for i in range(n_junk)]
+    done = eng.drain()
+    assert sorted(r.id for r in done) == sorted(ids)  # nobody starves
+    assert eng.in_flight == 0
+    by_id = {r.id: r for r in done}
+    for i in range(n_junk):
+        r = by_id[ids[n_good + i]]
+        assert int(r.iterations[0]) == spec.cfg.max_iters
+        assert not bool(r.factorization.converged[0])
+    # with 4 slots and 13 requests the engine must have recycled slots
+    assert eng.steps_total > 1
+    # total sweeps is bounded by the junk queries' budget plus slack — a
+    # batch-and-wait wave scheme would need ceil(13/4)=4 waves of max_iters
+    assert eng.sweeps_total < 2 * spec.cfg.max_iters
+
+
+def test_per_request_iterations_match_solo_runs(lvrf_setup):
+    """A request's trajectory must not depend on its slot or batch-mates."""
+    spec, cfg, atoms = lvrf_setup
+    rng = np.random.default_rng(2)
+    vals = jnp.asarray(rng.integers(0, cfg.n_values, (5, 3)))
+    qs = lvrf.encode_row(atoms, vals, cfg)
+    # mix in junk so slots free up at very different times
+    junk = jnp.asarray(rng.normal(size=(2, cfg.vsa.dim)), jnp.float32)
+    keys = jax.random.split(jax.random.PRNGKey(42), 5)
+    eng = engine.Engine(spec, slots=2, sweeps_per_step=3)
+    ids = [eng.submit(qs[i], keys=keys[i][None]) for i in range(5)]
+    for i in range(2):
+        eng.submit(junk[i])
+    done = {r.id: r for r in eng.drain()}
+    for i in range(5):
+        solo = fz.factorize(qs[i], spec.codebooks, keys[i], spec.cfg,
+                            spec.valid_mask)
+        req = done[ids[i]]
+        assert int(req.iterations[0]) == int(solo.iterations)
+        np.testing.assert_array_equal(req.factorization.indices[0],
+                                      np.asarray(solo.indices))
+        np.testing.assert_allclose(req.factorization.reconstruction_sim[0],
+                                   float(solo.reconstruction_sim), rtol=1e-6)
+
+
+def test_sweeps_per_step_is_scheduler_derived(lvrf_setup):
+    spec, _, _ = lvrf_setup
+    k = engine.derive_sweeps_per_step(spec, slots=16)
+    assert isinstance(k, int) and k >= 1
+    eng = engine.Engine(spec, slots=16)
+    assert eng.sweeps_per_step == k
+    assert engine.Engine(spec, slots=16, sweeps_per_step=5).sweeps_per_step == 5
+
+
+def test_engine_latency_accounting(lvrf_setup):
+    spec, cfg, atoms = lvrf_setup
+    vals = jnp.asarray(np.random.default_rng(3).integers(0, cfg.n_values, (3, 3)))
+    qs = lvrf.encode_row(atoms, vals, cfg)
+    eng = engine.Engine(spec, slots=4)
+    for i in range(3):
+        eng.submit(qs[i])
+    done = eng.drain()
+    for r in done:
+        assert r.latency_s is not None and r.latency_s >= 0
+        assert r.done_sweep >= r.submit_sweep
+    st = eng.stats()
+    assert st["completed"] == 3 and st["latency_p50_ms"] is not None
