@@ -154,7 +154,8 @@ class _State(NamedTuple):
     it: jax.Array  # [] global sweep counter
 
 
-def sweep_cost_ops(cfg: FactorizerConfig, n: int) -> list:
+def sweep_cost_ops(cfg: FactorizerConfig, n: int, *, data_shards: int = 1,
+                   model_shards: int = 1) -> list:
     """Scheduler cost hints for ONE resonator sweep over `n` queries.
 
     unbind -> codebook scores -> projection -> convergence check, sized per
@@ -162,20 +163,38 @@ def sweep_cost_ops(cfg: FactorizerConfig, n: int) -> list:
     accelerates; bipolar unbinding is elementwise SIMD work.  Lives here (not
     in the engine) because it depends only on the factorizer shapes and the
     ``core.scheduler`` Op vocabulary.
+
+    With shards the dims are *per device* of a ``data x model`` mesh (rows
+    over ``data``, codebook rows over ``model``), and the cross-shard
+    ``psum``\\ s the sharded sweep really executes (packed score+projection
+    reduce per factor, then the convergence atom gather — see
+    :func:`make_resonator`) appear as ``collective`` ops, so an adSCH plan
+    prices the wire time instead of assuming communication is free.
     """
     from repro.core.scheduler import Op
     F, M, D = cfg.num_factors, cfg.codebook_size, cfg.vsa.dim
+    n_loc = -(-n // data_shards)
+    m_loc = -(-M // model_shards)
     ops = []
     if cfg.algebra == "unitary":
-        ops.append(Op("unbind", "circconv", (n * F * cfg.vsa.blocks,
+        ops.append(Op("unbind", "circconv", (n_loc * F * cfg.vsa.blocks,
                                              cfg.vsa.lanes), symbolic=True))
     else:
-        ops.append(Op("unbind", "simd", (n * F * D,), symbolic=True))
-    ops.append(Op("scores", "gemm", (n * F, D, M), deps=("unbind",),
+        ops.append(Op("unbind", "simd", (n_loc * F * D,), symbolic=True))
+    ops.append(Op("scores", "gemm", (n_loc * F, D, m_loc), deps=("unbind",),
                   symbolic=True))
-    ops.append(Op("project", "gemm", (n * F, M, D), deps=("scores",),
+    ops.append(Op("project", "gemm", (n_loc * F, m_loc, D), deps=("scores",),
                   symbolic=True))
-    ops.append(Op("converge", "simd", (n * D,), deps=("project",),
+    conv_dep = "project"
+    if model_shards > 1:
+        ops.append(Op("psum_scores", "collective",
+                      (4 * n_loc * F * (M + D), model_shards),
+                      deps=("project",), symbolic=True))
+        ops.append(Op("psum_recon", "collective",
+                      (4 * n_loc * F * D, model_shards),
+                      deps=("psum_scores",), symbolic=True))
+        conv_dep = "psum_recon"
+    ops.append(Op("converge", "simd", (n_loc * D,), deps=(conv_dep,),
                   symbolic=True))
     return ops
 
@@ -197,8 +216,29 @@ class Resonator(NamedTuple):
     refill_many: "object"  # (qs, state, slots [K], qs [K, D], keys [K, ...])
 
 
+def superposition_init(codebooks, cfg: FactorizerConfig,
+                       valid_mask: jax.Array | None = None) -> jax.Array:
+    """Zero-information starting estimate [F, D]: bundle of all valid atoms.
+
+    Exposed so a model-sharded resonator (codebook rows split over a mesh
+    axis) can be handed the init computed once from the *full* codebooks —
+    summing the bundle shard-wise and psum-ing would reassociate the
+    floating-point reduction and break bit-parity with the dense path.
+    """
+    dense_cb = codebooks.dequantize() if isinstance(codebooks, QTensor) else codebooks
+    if cfg.algebra == "bipolar":
+        dense_cb = vsa.normalize_sign(dense_cb)
+    if valid_mask is None:
+        valid_mask = jnp.ones(dense_cb.shape[:2], dtype=bool)
+    return _norm(jnp.einsum("fm,fmd->fd", valid_mask.astype(dense_cb.dtype),
+                            dense_cb), cfg)
+
+
 def make_resonator(codebooks, cfg: FactorizerConfig,
-                   valid_mask: jax.Array | None = None) -> Resonator:
+                   valid_mask: jax.Array | None = None, *,
+                   model_axis: str | None = None,
+                   full_rows: int | None = None,
+                   init_est: jax.Array | None = None) -> Resonator:
     """Build the sweep machinery for one codebook set (see :class:`Resonator`).
 
     A query row freezes once it converges (``done``) or exhausts its
@@ -206,28 +246,108 @@ def make_resonator(codebooks, cfg: FactorizerConfig,
     slotted in at different times (engine serving) each get the full
     ``cfg.max_iters`` budget and an identical stochasticity stream to a solo
     :func:`factorize` call with the same key.
+
+    **Model-sharded mode** (``model_axis`` set): call *inside* a
+    ``shard_map`` body whose mesh has that axis, passing the LOCAL codebook
+    shard ``[F, M/mp, D]`` (rows split over the axis) while ``valid_mask``
+    stays FULL ``[F, M]`` (it is tiny and must mask the *gathered* scores).
+    ``init_est`` must then be supplied, precomputed from the full codebooks
+    via :func:`superposition_init` (see there).  Each factor update runs its
+    similarity scores against the local rows only and issues ONE ``psum``
+    carrying (zero-padded local scores, partial projection); the padded
+    score gather is bit-exact (disjoint supports), the projection reduce is
+    the one place the fp sum is reassociated — integer-exact for bipolar
+    codebooks with elementwise activations, last-ulp for real algebras.
+    Convergence gathers the F decoded atom rows with one more one-hot psum.
+    Queries/state shard freely over a `data` axis with no extra machinery —
+    every other op is row-local.
     """
     vcfg = cfg.vsa
+    if model_axis is not None:
+        if isinstance(codebooks, QTensor):
+            raise ValueError("model-sharded resonator requires dense "
+                             "codebooks (quantized rows would need their "
+                             "scales resharded too)")
+        if init_est is None:
+            raise ValueError("model-sharded resonator needs init_est from "
+                             "superposition_init(full_codebooks, ...)")
+        if valid_mask is None and full_rows is None:
+            # without either there is no way to know the full row count: M
+            # would silently fall back to the local shard's rows and every
+            # shard's scores would land at offset 0 of the padded gather
+            raise ValueError("model-sharded resonator needs the full row "
+                             "count: pass full_rows= (or a full valid_mask)")
     dense_cb = codebooks.dequantize() if isinstance(codebooks, QTensor) else codebooks
     if cfg.algebra == "bipolar":
         dense_cb = vsa.normalize_sign(dense_cb)  # de-quantised atoms stay bipolar
+    F, M_loc, D = dense_cb.shape
     no_mask = valid_mask is None
+    M = (valid_mask.shape[1] if valid_mask is not None else
+         (full_rows if full_rows is not None else M_loc))
+    if model_axis is not None and M % M_loc != 0:
+        raise ValueError(f"codebook rows {M} don't tile into local shards "
+                         f"of {M_loc}")
     if no_mask:
-        valid_mask = jnp.ones(dense_cb.shape[:2], dtype=bool)
+        valid_mask = jnp.ones((dense_cb.shape[0], M), dtype=bool)
     neg = jnp.asarray(-1e9, jnp.float32)
 
-    F, M, D = dense_cb.shape
     use_int8_kernel = (isinstance(codebooks, QTensor)
                        and codebooks.values.dtype == jnp.int8)
     # Superposition init: bundle of all (valid) atoms == zero-information
     # estimate, identical for every query.
-    init_est = _norm(jnp.einsum("fm,fmd->fd", valid_mask.astype(dense_cb.dtype),
-                                dense_cb), cfg)
+    if init_est is None:
+        init_est = superposition_init(codebooks, cfg, valid_mask)
+
+    def _row_offset():
+        return jax.lax.axis_index(model_axis) * M_loc
+
+    # One psum per factor suffices when the activation is elementwise and
+    # noise-free: the projection weights of the local rows don't need the
+    # other shards' scores.  Score noise (std over the full row) and softmax
+    # (normalises over the full row) need the gathered scores first, which
+    # costs a second psum per factor.
+    one_psum = (cfg.noise_std == 0
+                and cfg.activation in ("identity", "abs", "relu"))
 
     def factor_update(qs, i: int, est: jax.Array, k_sim, k_proj):
         """One factor's unbind -> score -> project update for the whole batch;
         returns (alpha_i [N, M], new_est_i [N, D])."""
         unbound = _unbind(qs, est, cfg, factor=i)  # [N, D]      (Step 1)
+        if model_axis is not None:
+            alpha_loc = unbound @ dense_cb[i].T  # [N, M_loc] local rows
+            off = _row_offset()
+            pad = jnp.zeros(alpha_loc.shape[:-1] + (M,), alpha_loc.dtype)
+            padded = jax.lax.dynamic_update_slice_in_dim(pad, alpha_loc, off,
+                                                         axis=-1)
+            if one_psum:
+                mask_loc = jax.lax.dynamic_slice_in_dim(valid_mask[i], off,
+                                                        M_loc)
+                w_loc = _activation(jnp.where(mask_loc, alpha_loc, neg),
+                                    cfg) * mask_loc
+                packed = jax.lax.psum(
+                    jnp.concatenate([padded, w_loc @ dense_cb[i]], axis=-1),
+                    model_axis)
+                alpha = jnp.where(valid_mask[i], packed[..., :M], neg)
+                new_est = packed[..., M:]
+            else:
+                alpha = jax.lax.psum(padded, model_axis)
+                alpha = jnp.where(valid_mask[i], alpha, neg)
+                if cfg.noise_std > 0:  # keys replicated over model: exact
+                    sigma = cfg.noise_std * jnp.std(
+                        jnp.where(valid_mask[i], alpha, 0.0), axis=-1,
+                        keepdims=True)
+                    noise = jax.vmap(lambda k: jax.random.normal(k, (M,)))(k_sim)
+                    alpha = jnp.where(valid_mask[i], alpha + sigma * noise,
+                                      alpha)
+                w = _activation(alpha, cfg) * valid_mask[i]
+                w_loc = jax.lax.dynamic_slice_in_dim(w, off, M_loc, axis=-1)
+                new_est = jax.lax.psum(w_loc @ dense_cb[i], model_axis)
+            if cfg.proj_noise_std > 0:
+                sigma = cfg.proj_noise_std * jnp.std(new_est, axis=-1,
+                                                     keepdims=True)
+                new_est = new_est + sigma * jax.vmap(
+                    lambda k: jax.random.normal(k, (D,)))(k_proj)
+            return alpha, _norm(new_est, cfg)
         if isinstance(codebooks, QTensor):
             wf = QTensor(codebooks.values[i], codebooks.scale[i])
             if use_int8_kernel:  # fused int8 kernel, batched [N, D] entry
@@ -252,10 +372,25 @@ def make_resonator(codebooks, cfg: FactorizerConfig,
                 lambda k: jax.random.normal(k, (D,)))(k_proj)
         return alpha, _norm(new_est, cfg)
 
+    def hard_atoms(idx: jax.Array) -> jax.Array:
+        """Decoded atom rows [..., F, D] for per-factor indices [..., F] —
+        a plain gather dense, a one-hot contraction + psum sharded (exact:
+        every non-owning shard contributes zeros)."""
+        if model_axis is None:
+            return dense_cb[jnp.arange(F), idx]
+        loc = idx - _row_offset()
+        onehot = (loc[..., None] == jnp.arange(M_loc)).astype(dense_cb.dtype)
+        return jax.lax.psum(jnp.einsum("...fm,fmd->...fd", onehot, dense_cb),
+                            model_axis)
+
+    def reconstruct(idx: jax.Array) -> jax.Array:
+        return vsa.bind_all(hard_atoms(idx), vcfg, axis=-2)
+
     use_fused = (cfg.fused_step and cfg.algebra == "bipolar" and cfg.synchronous
                  and cfg.noise_std == 0 and cfg.proj_noise_std == 0
                  and not isinstance(codebooks, QTensor)
                  and cfg.activation in ("identity", "abs")
+                 and model_axis is None  # kernel sees one device's rows only
                  # the fused kernel's projection cannot see valid_mask, so a
                  # padded codebook would leak invalid atoms into the estimates
                  and no_mask)
@@ -291,7 +426,7 @@ def make_resonator(codebooks, cfg: FactorizerConfig,
         # Convergence (vectorized once per sweep): do the hard-decoded atoms
         # reconstruct each query?
         idx = jnp.argmax(alpha, axis=-1)  # [N, F]
-        recon = bind_combo(dense_cb, idx, vcfg)  # [N, D]
+        recon = reconstruct(idx)  # [N, D]
         sim = vsa.similarity(recon, qs)  # [N]
         act = active(s)
         # Freeze converged / budget-exhausted queries: est/sim/iters stop.
@@ -316,10 +451,15 @@ def make_resonator(codebooks, cfg: FactorizerConfig,
     def decode(qs, s: _State) -> FactorizerResult:
         """Final decode from the (frozen) estimates."""
         unbound = _unbind(qs, s.est, cfg)  # [N, F, D]
-        alpha = jnp.where(valid_mask[None],
-                          jnp.einsum("nfd,fmd->nfm", unbound, dense_cb), neg)
+        alpha = jnp.einsum("nfd,fmd->nfm", unbound, dense_cb)
+        if model_axis is not None:  # gather local-row scores (bit-exact pad)
+            pad = jnp.zeros(alpha.shape[:-1] + (M,), alpha.dtype)
+            alpha = jax.lax.psum(
+                jax.lax.dynamic_update_slice_in_dim(pad, alpha, _row_offset(),
+                                                    axis=-1), model_axis)
+        alpha = jnp.where(valid_mask[None], alpha, neg)
         idx = jnp.argmax(alpha, axis=-1).astype(jnp.int32)
-        recon = bind_combo(dense_cb, idx, vcfg)
+        recon = reconstruct(idx)
         return FactorizerResult(idx, s.iters, s.done,
                                 vsa.similarity(recon, qs), alpha)
 

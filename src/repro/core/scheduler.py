@@ -24,7 +24,7 @@ from typing import Literal
 
 from repro.cogsim import model as hw_model
 
-OpKind = Literal["gemm", "conv2d", "circconv", "simd"]
+OpKind = Literal["gemm", "conv2d", "circconv", "simd", "collective"]
 
 
 @dataclasses.dataclass
@@ -33,11 +33,14 @@ class Op:
 
     name: str
     kind: OpKind
-    # gemm/conv2d: (m, k, n) after im2col; circconv: (k_convs, d); simd: (elems,)
+    # gemm/conv2d: (m, k, n) after im2col; circconv: (k_convs, d);
+    # simd: (elems,); collective: (payload_bytes, participants)
     dims: tuple
     deps: tuple = ()
     batch: int = 0  # batch index, for interleaving analysis
     symbolic: bool = False
+    collective: str = "psum"  # kind=="collective" only: psum | all_gather |
+    # reduce_scatter | ppermute (the jax.lax primitive being priced)
 
     def flops(self) -> float:
         if self.kind in ("gemm", "conv2d"):
@@ -46,6 +49,8 @@ class Op:
         if self.kind == "circconv":
             kc, d = self.dims
             return 2.0 * kc * d * d
+        if self.kind == "collective":
+            return 0.0  # pure data movement on the interconnect
         return float(self.dims[0])
 
     def bytes_moved(self, itemsize: int = 1) -> float:
@@ -55,6 +60,8 @@ class Op:
         if self.kind == "circconv":
             kc, d = self.dims
             return 3.0 * kc * d * itemsize
+        if self.kind == "collective":
+            return float(self.dims[0])  # dims already carries bytes
         return float(self.dims[0]) * itemsize
 
 
@@ -79,6 +86,16 @@ def op_cycles(op: Op, hw: hw_model.ArrayConfig, n_cells: int) -> float:
         return hw_model.sa_circconv_as_gemv_cycles(sub, kc, d)["cycles"]
     if op.kind == "simd":
         return hw_model.simd_cycles(hw, op.dims[0])["cycles"]
+    if op.kind == "collective":
+        # priced on the interconnect (launch/mesh.py ICI constants), not the
+        # cell pool — a collective occupies no cells, like a SIMD op, but
+        # its duration is wire time, so adSCH can decide whether a psum
+        # hides inside a neural overlap window or stretches the lag.
+        from repro.launch.mesh import collective_seconds
+
+        nbytes, participants = op.dims
+        return collective_seconds(nbytes, participants,
+                                  op.collective) * hw.freq_hz
     raise ValueError(op.kind)
 
 
@@ -137,9 +154,10 @@ def schedule(ops: list, hw: hw_model.ArrayConfig, *,
             symbolic = sorted([o for o in ready if o.symbolic],
                               key=lambda o: -o.flops())
             neural_waiting = bool(neural)
-            symbolic_waiting = any(o.kind != "simd" for o in symbolic)
+            symbolic_waiting = any(o.kind not in ("simd", "collective")
+                                   for o in symbolic)
             for op in neural + symbolic:
-                if op.kind == "simd":
+                if op.kind in ("simd", "collective"):  # cell-free resources
                     dur = op_cycles(op, hw, 0)
                     done_at[op.name] = t + dur
                     placements.append(Placement(op, t, t + dur, ()))

@@ -26,11 +26,28 @@ def make_stream_keys(key: jax.Array, n_streams: int, d_model: int,
 
 
 def superpose_embeddings(embs: jax.Array, keys: jax.Array,
-                         blocks: int = 8) -> jax.Array:
-    """embs [N, S_streams, T, d] -> one bundled sequence [N, T, d]."""
+                         blocks: int = 8,
+                         carrier_rms: float | None = None) -> jax.Array:
+    """embs [N, S_streams, T, d] -> one bundled sequence [N, T, d].
+
+    ``carrier_rms`` rescales every bundled token to that per-component RMS.
+    Residual backbones *add* each sublayer's output to the stream, and a
+    pre-norm block's output RMS is O(1) regardless of its input scale
+    (RMSNorm re-normalises the input first) — so an un-rescaled bundle
+    (token RMS ~ d^-0.5 for d^-0.5-scaled embeddings) is buried under
+    ~2*n_layers O(1)-RMS additions and the per-stream content cannot be
+    recovered at the unbind.  Amplifying the carrier is scale-free for the
+    blocks themselves (their inputs are re-normalised) but keeps the bound
+    carrier dominant in the residual stream.  ``None`` keeps the raw mean
+    (backbones trained in superposition, or non-residual pipelines).
+    """
     cfg = vsa.VSAConfig(dim=embs.shape[-1], blocks=blocks)
     bound = vsa.bind(embs, keys[None, :, None, :], cfg)
-    return jnp.mean(bound, axis=1)
+    s = jnp.mean(bound, axis=1)
+    if carrier_rms is not None:
+        rms = jnp.sqrt(jnp.mean(s * s, axis=-1, keepdims=True)) + 1e-6
+        s = s * (carrier_rms / rms)
+    return s
 
 
 def unbind_hidden(hidden: jax.Array, keys: jax.Array,
@@ -41,20 +58,28 @@ def unbind_hidden(hidden: jax.Array, keys: jax.Array,
 
 
 def mimo_lm_logits(params, cfg, tokens: jax.Array, keys: jax.Array,
-                   blocks: int = 8):
+                   blocks: int = 8, carrier_rms: float | None = None):
     """Serve S_streams token batches through ONE backbone pass.
 
     tokens: [N, S_streams, T] -> logits [N, S_streams, T, vocab].
+
+    ``carrier_rms`` defaults to ``2 * n_layers``: the bundle is amplified
+    past the ~2 sublayer additions of O(1) RMS that every layer of the
+    pre-norm residual stack contributes (see
+    :func:`superpose_embeddings`), which is what keeps the streams
+    separable through an *untrained* backbone.
     """
     from repro.nn import transformer as T
     from repro.nn.common import shard
-    import dataclasses as dc
 
+    if carrier_rms is None:
+        carrier_rms = 2.0 * cfg.n_layers
     N, S_str, Tlen = tokens.shape
     emb = jnp.take(params["embed"].astype(cfg.activ_dtype),
                    tokens.reshape(N * S_str, Tlen), axis=0)
     emb = emb.reshape(N, S_str, Tlen, cfg.d_model)
-    sup = superpose_embeddings(emb, keys, blocks).astype(cfg.activ_dtype)
+    sup = superpose_embeddings(emb, keys, blocks,
+                               carrier_rms=carrier_rms).astype(cfg.activ_dtype)
 
     # run the backbone body on the superposed sequence (skip its own embed)
     x = shard(sup, "batch", "seq", "embed_act")

@@ -28,18 +28,20 @@ Stream use (throughput pipelines)::
     answers = runner((image_stream, cand_stream), key)
 """
 from repro.engine import registry
+from repro.engine import sharding
 from repro.engine.build import (PipelinePlan, PipelineRunner, build_pipeline,
                                 plan_interleave)
 from repro.engine.engine import (Engine, Request, derive_sweeps_per_step,
                                  sweep_cost_ops)
 from repro.engine.registry import ServeSpec
+from repro.engine.sharding import ShardedEngine, choose_slots
 from repro.engine.stage import Stage, StageGraph, graph_ops, stage_ops
 
 from repro.engine import pipelines as _builtin  # noqa: F401  (registers built-ins)
 
 __all__ = [
-    "Engine", "Request", "ServeSpec", "Stage", "StageGraph",
-    "PipelinePlan", "PipelineRunner", "build_pipeline", "plan_interleave",
-    "derive_sweeps_per_step", "sweep_cost_ops", "graph_ops", "stage_ops",
-    "registry",
+    "Engine", "Request", "ServeSpec", "ShardedEngine", "Stage", "StageGraph",
+    "PipelinePlan", "PipelineRunner", "build_pipeline", "choose_slots",
+    "plan_interleave", "derive_sweeps_per_step", "sweep_cost_ops",
+    "graph_ops", "stage_ops", "registry", "sharding",
 ]

@@ -47,7 +47,8 @@ def _makespan(ops, hw, interleave: bool) -> float:
 
 
 def plan_interleave(graph: StageGraph, hw=hw_model.COGSYS, *,
-                    min_gain: float = 1.05) -> PipelinePlan:
+                    min_gain: float = 1.05,
+                    shards: tuple | None = None) -> PipelinePlan:
     """Decide, per stage boundary, whether a one-batch lag pays off.
 
     Boundary i separates stages[:i+1] from stages[i+1:].  With lag 1, one
@@ -56,7 +57,18 @@ def plan_interleave(graph: StageGraph, hw=hw_model.COGSYS, *,
     find enough idle cells during the head's neural blocks to hide the tail
     (Fig. 13c), or does the overlap run no faster than sequential?  A
     boundary is pipelined when the modeled speedup is >= ``min_gain``.
+
+    ``shards=(data, model)`` plans the graph as ONE device of that mesh
+    sees it: compute dims rescaled to the shard's slice and the cross-shard
+    psums priced as ``collective`` ops on the ICI
+    (:func:`repro.engine.sharding.costs.shard_graph`) — communication is no
+    longer free, so a boundary whose symbolic tail only hid inside the
+    neural window because it ignored gather time can lose its lag.
     """
+    if shards is not None:
+        from repro.engine.sharding.costs import shard_graph
+
+        graph = shard_graph(graph, *shards)
     stages = graph.stages
     lags, gains = [], []
     for i in range(len(stages) - 1):

@@ -35,19 +35,29 @@ from repro.engine.registry import ServeSpec
 from repro.engine.stage import stage_ops
 
 
-def derive_sweeps_per_step(spec: ServeSpec, slots: int,
-                           hw=hw_model.COGSYS) -> int:
+def derive_sweeps_per_step(spec: ServeSpec, slots: int, hw=hw_model.COGSYS, *,
+                           data_shards: int = 1, model_shards: int = 1) -> int:
     """Sweep burst between retirement scans, from adSCH runtime estimates.
 
     With a declared graph the burst is the number of symbolic sweeps that fit
     the neural stages' makespan (the interleave window the hardware scheduler
     fills, Fig. 13b).  Without one, a fixed burst of 8 amortizes the
-    host-side slotting scan.
+    host-side slotting scan.  With shards both sides are priced per device —
+    the sweep including its cross-shard psums (collective ops on the ICI),
+    the neural window scaled to its data-parallel slice — so a sharded
+    engine's burst reflects that communication makes each sweep *longer*
+    while row-sharding makes it *cheaper*.
     """
-    t_sweep = sch.schedule(sweep_cost_ops(spec.cfg, slots), hw).makespan
+    t_sweep = sch.schedule(
+        sweep_cost_ops(spec.cfg, slots, data_shards=data_shards,
+                       model_shards=model_shards), hw).makespan
     if spec.graph is not None and t_sweep > 0:
         neural = [st for st in spec.graph.stages if not st.symbolic]
         n_ops = stage_ops(neural, 0) if neural else []
+        if n_ops and data_shards > 1:
+            from repro.engine.sharding.costs import shard_ops
+
+            n_ops = shard_ops(n_ops, data_shards)
         if n_ops:
             t_neural = sch.schedule(n_ops, hw).makespan
             return int(np.clip(round(t_neural / t_sweep), 1, 64))
@@ -95,11 +105,30 @@ class Engine:
         self.spec = spec
         self.slots = slots
         self.hw = hw
-        self.sweeps_per_step = (derive_sweeps_per_step(spec, slots, hw)
+        self.sweeps_per_step = (self._derive_sweeps_per_step()
                                 if sweeps_per_step is None else sweeps_per_step)
+        self._key = key if key is not None else jax.random.PRNGKey(0)
+        # sets self.qs / self.state / self._sweeps / self._refill_many /
+        # self._decode — the seam a mesh-parallel engine overrides
+        # (repro.engine.sharding.ShardedEngine lowers the same closures
+        # through shard_map instead)
+        self._build_programs()
+        self._owner: list = [None] * slots  # (request, query_index) | None
+        self._queue: deque = deque()
+        self._next_id = 0
+        self.completed: dict = {}
+        self.sweeps_total = 0
+        self.steps_total = 0
+
+    def _derive_sweeps_per_step(self) -> int:
+        return derive_sweeps_per_step(self.spec, self.slots, self.hw)
+
+    def _build_programs(self) -> None:
+        """Compile the three device programs (sweep burst / refill / decode)
+        and allocate the parked slot state."""
+        spec, slots = self.spec, self.slots
         rs = fz.make_resonator(spec.codebooks, spec.cfg, spec.valid_mask)
         self._rs = rs
-        self._key = key if key is not None else jax.random.PRNGKey(0)
         self.qs = jnp.zeros((slots, spec.dim), jnp.float32)
         st = rs.init(self.qs, jax.random.split(jax.random.PRNGKey(0), slots))
         self.state = st._replace(done=jnp.ones(slots, bool))  # all rows parked
@@ -118,12 +147,6 @@ class Engine:
         self._sweeps = jax.jit(run_sweeps)
         self._refill_many = jax.jit(rs.refill_many)
         self._decode = jax.jit(rs.decode)
-        self._owner: list = [None] * slots  # (request, query_index) | None
-        self._queue: deque = deque()
-        self._next_id = 0
-        self.completed: dict = {}
-        self.sweeps_total = 0
-        self.steps_total = 0
 
     # -- request intake ----------------------------------------------------
 

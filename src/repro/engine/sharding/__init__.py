@@ -1,0 +1,32 @@
+"""repro.engine.sharding — mesh-parallel serving of registered pipelines.
+
+The scale-out layer over :class:`repro.engine.Engine` (ROADMAP: shard the
+``[N, F, D]`` slot state over a ``data`` mesh axis):
+
+  * :class:`ShardedEngine` — the same ``submit()/step()/drain()`` engine,
+    lowered through ``shard_map`` on a ``data x model`` mesh: slot rows
+    shard over ``data`` (requests are row-independent), codebooks either
+    replicate or shard their rows over ``model`` with psum-reduced
+    similarity scores (``codebook_placement="rows"``);
+  * :func:`choose_slots` — adSCH-cost-model autotuner picking slots per
+    shard from (modeled or measured) sweep cost and the arrival rate;
+  * :func:`shard_ops` / :func:`shard_graph` — cost-side transforms that
+    rescale scheduler op graphs to one device's slice and surface the
+    cross-shard collectives, so ``plan_interleave`` prices communication
+    into the stage-graph lag.
+
+The same registry entries (``nvsa_abduction``, ``lvrf_rows``) serve
+unchanged: a ShardedEngine on a 4x2 host mesh is bit-compatible with the
+single-device Engine (see tests/test_engine_sharded.py for the exact
+parity contract per codebook placement).
+"""
+from repro.engine.sharding.autotune import (choose_slots, measure_sweep_seconds,
+                                            modeled_sweep_seconds,
+                                            service_rate_rps)
+from repro.engine.sharding.costs import shard_graph, shard_ops
+from repro.engine.sharding.engine import ShardedEngine
+
+__all__ = [
+    "ShardedEngine", "choose_slots", "measure_sweep_seconds",
+    "modeled_sweep_seconds", "service_rate_rps", "shard_graph", "shard_ops",
+]

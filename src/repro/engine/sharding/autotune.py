@@ -1,0 +1,111 @@
+"""Slot-count autotuning from the adSCH cost model + arrival rate.
+
+ROADMAP open item: "pick ``slots`` from the adSCH cost model + measured
+arrival rate instead of a constructor constant".  The model is the steady
+state of continuous batching: with ``n`` live rows per data shard the engine
+retires on average ``n * data_shards / mean_iters`` requests per full-batch
+sweep, and a sweep costs ``t_sweep(n)`` seconds — priced either analytically
+(the scheduler's makespan for one sweep's op graph, collectives included) or
+by timing the actual compiled sweep (:func:`measure_sweep_seconds`).
+
+``choose_slots`` then picks the smallest slot count whose service rate
+covers the arrival rate with headroom — smallest because every extra slot
+adds queueing latency for nothing once the engine keeps up.  Without an
+arrival target it returns the diminishing-returns knee of the throughput
+curve (batch efficiency saturates once the cell pool / memory system is
+full, exactly the paper's utilization argument).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.cogsim import model as hw_model
+from repro.core import factorizer as fz
+from repro.core import scheduler as sch
+
+DEFAULT_CANDIDATES = (4, 8, 16, 32, 64, 128, 256)
+
+
+def modeled_sweep_seconds(cfg: fz.FactorizerConfig, slots_per_shard: int,
+                          hw=hw_model.COGSYS, *, data_shards: int = 1,
+                          model_shards: int = 1) -> float:
+    """adSCH makespan of ONE per-device sweep (collectives included), in s."""
+    ops = fz.sweep_cost_ops(cfg, slots_per_shard * data_shards,
+                            data_shards=data_shards,
+                            model_shards=model_shards)
+    return sch.schedule(ops, hw).makespan / hw.freq_hz
+
+
+def measure_sweep_seconds(spec, slots_per_shard: int, *, iters: int = 5) -> float:
+    """Wall-time one compiled single-device sweep at this slot count.
+
+    Host-mode measurement for :func:`choose_slots`'s ``measured_sweep_s``;
+    per-shard cost on a homogeneous mesh is the same program at the local
+    slot count.
+    """
+    rs = fz.make_resonator(spec.codebooks, spec.cfg, spec.valid_mask)
+    qs = jnp.zeros((slots_per_shard, spec.dim), jnp.float32)
+    s = rs.init(qs, jax.random.split(jax.random.PRNGKey(0), slots_per_shard))
+    sweep = jax.jit(rs.sweep)
+    s = jax.block_until_ready(sweep(qs, s))  # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        s = sweep(qs, s)
+    jax.block_until_ready(s)
+    return (time.perf_counter() - t0) / iters
+
+
+def service_rate_rps(spec, slots_per_shard: int, *, data_shards: int = 1,
+                     model_shards: int = 1, hw=hw_model.COGSYS,
+                     mean_iters: float | None = None,
+                     measured_sweep_s=None) -> float:
+    """Steady-state requests/s the engine retires at this slot count."""
+    if measured_sweep_s is not None:
+        t = measured_sweep_s(slots_per_shard) if callable(measured_sweep_s) \
+            else float(measured_sweep_s)
+    else:
+        t = modeled_sweep_seconds(spec.cfg, slots_per_shard, hw,
+                                  data_shards=data_shards,
+                                  model_shards=model_shards)
+    iters = mean_iters if mean_iters is not None else \
+        max(1, spec.cfg.max_iters // 3)  # observed mean convergence ~ max/3
+    return slots_per_shard * data_shards / (iters * max(t, 1e-12))
+
+
+def choose_slots(spec, *, arrival_rps: float | None = None,
+                 data_shards: int = 1, model_shards: int = 1,
+                 hw=hw_model.COGSYS, candidates=DEFAULT_CANDIDATES,
+                 mean_iters: float | None = None, measured_sweep_s=None,
+                 headroom: float = 1.25, knee_gain: float = 1.15) -> int:
+    """Pick slots-per-shard for a (possibly sharded) engine.
+
+    With ``arrival_rps``: the smallest candidate whose modeled service rate
+    covers ``headroom * arrival_rps`` (more slots past that point only adds
+    batch-formation latency); the max-throughput candidate if none keeps up.
+    Without: the knee of the throughput curve — the smallest candidate whose
+    doubling no longer buys ``knee_gain`` more requests/s.
+
+    ``measured_sweep_s`` (a seconds value or a ``f(slots_per_shard)``
+    callable, e.g. :func:`measure_sweep_seconds`) replaces the analytic
+    sweep cost with a measured one.
+    """
+    cands = sorted(set(int(c) for c in candidates))
+    if not cands:
+        raise ValueError("choose_slots needs at least one candidate")
+    rate = {n: service_rate_rps(spec, n, data_shards=data_shards,
+                                model_shards=model_shards, hw=hw,
+                                mean_iters=mean_iters,
+                                measured_sweep_s=measured_sweep_s)
+            for n in cands}
+    if arrival_rps is not None:
+        for n in cands:
+            if rate[n] >= headroom * arrival_rps:
+                return n
+        return max(cands, key=lambda n: rate[n])
+    for a, b in zip(cands, cands[1:]):
+        if rate[b] < knee_gain * rate[a]:
+            return a
+    return cands[-1]

@@ -1,0 +1,92 @@
+"""Collective-aware cost transforms: per-shard op graphs for the scheduler.
+
+The adSCH list scheduler (:mod:`repro.core.scheduler`) prices an op graph on
+ONE device's cell pool; a mesh-parallel engine runs each device on a slice of
+the work plus the collectives stitching the slices together.  These
+transforms rewrite a cost graph accordingly:
+
+  * :func:`shard_ops` rescales compute dims to a single ``data`` shard's
+    slice (requests/rows are the batch dimension everywhere in this repo);
+  * :func:`shard_graph` additionally surfaces, for symbolic stages under
+    ``model`` sharding, the psum that re-gathers every scoring GEMM's output
+    across codebook-row shards — as ``collective`` ops costed with the ICI
+    constants (launch/mesh.py), so :func:`repro.engine.build.plan_interleave`
+    weighs wire time when deciding which stage boundaries still pay for a
+    one-batch lag.
+
+The factorizer's own sweep collectives are modeled exactly by
+:func:`repro.core.factorizer.sweep_cost_ops` (``model_shards=``); the
+stage-level rule here is the generic first-order version for registered
+graphs that only declare GEMM/conv/simd hints.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.scheduler import Op
+from repro.engine.stage import StageGraph
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-int(a) // max(int(b), 1))
+
+
+def shard_ops(ops: list, data_shards: int = 1, model_shards: int = 1) -> list:
+    """Rescale op dims to one ``data`` shard's slice of the batch.
+
+    The leading dim of gemm/conv2d (rows after im2col), the conv count of
+    circconv, and the element count of simd ops are all request-proportional
+    in this repo's graphs, so they divide by ``data_shards``.  ``collective``
+    ops pass through (their payload is already per-device).  ``model_shards``
+    does not rescale compute here — which dim a row-shard splits is op-
+    specific knowledge (see :func:`repro.core.factorizer.sweep_cost_ops`);
+    it is used by :func:`shard_graph` to size the gather collectives.
+    """
+    out = []
+    for op in ops:
+        if op.kind in ("gemm", "conv2d"):
+            m, k, n = op.dims
+            dims = (_ceil_div(m, data_shards), k, n)
+        elif op.kind == "circconv":
+            kc, d = op.dims
+            dims = (_ceil_div(kc, data_shards), d)
+        elif op.kind == "simd":
+            dims = (_ceil_div(op.dims[0], data_shards),)
+        else:  # collective: payload already per-device
+            dims = op.dims
+        out.append(dataclasses.replace(op, dims=dims))
+    return out
+
+
+def shard_graph(graph: StageGraph, data_shards: int = 1,
+                model_shards: int = 1) -> StageGraph:
+    """Per-shard clone of a StageGraph with the collectives made explicit.
+
+    Every stage's cost ops are rescaled by :func:`shard_ops`; under ``model``
+    sharding each *symbolic* GEMM (codebook scoring / projection work — the
+    ops whose operands a row-shard splits) is followed by a ``psum``
+    collective carrying its fp32 output, and downstream deps are rewired
+    through the psum so the scheduler cannot start dependents before the
+    gather lands.  Neural stages are data-parallel (their tensor-parallel
+    comms are out of scope for the cell-pool model) and gain no collectives.
+    """
+    new_stages = []
+    for st in graph.stages:
+        ops = shard_ops(list(st.cost_ops), data_shards, model_shards)
+        if model_shards > 1 and st.symbolic:
+            rewired, renames = [], {}
+            for op in ops:
+                op = dataclasses.replace(
+                    op, deps=tuple(renames.get(d, d) for d in op.deps))
+                rewired.append(op)
+                if op.kind == "gemm":
+                    m, _, n = op.dims
+                    ps = Op(op.name + "_psum", "collective",
+                            (4.0 * m * n, model_shards), deps=(op.name,),
+                            symbolic=True, collective="psum")
+                    rewired.append(ps)
+                    renames[op.name] = ps.name
+            ops = rewired
+        new_stages.append(dataclasses.replace(st, cost_ops=tuple(ops)))
+    return StageGraph(f"{graph.name}@{data_shards}x{model_shards}",
+                      tuple(new_stages))

@@ -21,8 +21,20 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_host_mesh(data: int = 4, model: int = 2):
-    """Small mesh over host CPU devices for distribution tests."""
+    """Small mesh over host CPU devices for distribution tests.
+
+    ``data`` is a *request* — it silently clamps down to whatever the device
+    count supports (the data axis only changes throughput, so any size is
+    servable).  ``model`` is a *contract* — codebook row placement depends on
+    it — so an unsatisfiable ``model`` raises instead of clamping.
+    """
     n = len(jax.devices())
+    if model > n:
+        raise ValueError(
+            f"make_host_mesh(model={model}) needs at least {model} devices "
+            f"but only {n} are visible; run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={model * data} "
+            "or lower `model`")
     data = min(data, max(1, n // model))
     return make_mesh((data, model), ("data", "model"))
 
@@ -31,3 +43,27 @@ def make_host_mesh(data: int = 4, model: int = 2):
 PEAK_FLOPS_BF16 = 197e12  # FLOP/s
 HBM_BW = 819e9  # B/s
 ICI_BW = 50e9  # B/s per link
+ICI_LATENCY_S = 1e-6  # per-hop launch latency (order-of-magnitude v5e)
+
+
+def collective_seconds(nbytes: float, participants: int,
+                       kind: str = "psum") -> float:
+    """First-order ring-collective time over `participants` devices.
+
+    Per-device wire traffic of the standard ring algorithms on `nbytes` of
+    payload: reduce-scatter / all-gather each move ``(p-1)/p * nbytes``;
+    psum (all-reduce) is the two chained -> ``2 (p-1)/p``.  ``ppermute``
+    moves the full payload one hop.  Used by
+    :func:`repro.core.scheduler.op_cycles` to price ``collective`` ops on
+    the ICI instead of treating cross-shard traffic as free.
+    """
+    p = max(int(participants), 1)
+    if p == 1:
+        return 0.0
+    frac = {"psum": 2.0 * (p - 1) / p,
+            "all_gather": (p - 1) / p,
+            "reduce_scatter": (p - 1) / p,
+            "ppermute": 1.0}.get(kind)
+    if frac is None:
+        raise ValueError(f"unknown collective kind {kind!r}")
+    return ICI_LATENCY_S + frac * nbytes / ICI_BW
