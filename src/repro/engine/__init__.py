@@ -11,7 +11,12 @@ paper's Sec. VI argues turns kernel speedups into end-to-end utilization):
   * :class:`Engine` — ``submit()/step()/drain()`` continuous batching of
     reasoning requests over the fixed-shape batch-native factorizer;
   * :func:`repro.engine.registry.build` — instantiate registered workloads
-    (``nvsa_abduction``, ``lvrf_rows``, plus anything downstream registers).
+    (``nvsa_abduction``, ``lvrf_rows``, ``lm_decode``, plus anything
+    downstream registers).
+
+For ONLINE serving — async submit with futures, multi-engine orchestration,
+EWMA-driven slot re-tuning — see :mod:`repro.runtime`, the layer above this
+one.
 
 Typical request-level use::
 
@@ -32,7 +37,7 @@ from repro.engine import sharding
 from repro.engine.build import (PipelinePlan, PipelineRunner, build_pipeline,
                                 plan_interleave)
 from repro.engine.engine import (Engine, Request, derive_sweeps_per_step,
-                                 sweep_cost_ops)
+                                 step_unit_ops, sweep_cost_ops)
 from repro.engine.registry import ServeSpec
 from repro.engine.sharding import ShardedEngine, choose_slots
 from repro.engine.stage import Stage, StageGraph, graph_ops, stage_ops
@@ -42,6 +47,6 @@ from repro.engine import pipelines as _builtin  # noqa: F401  (registers built-i
 __all__ = [
     "Engine", "Request", "ServeSpec", "ShardedEngine", "Stage", "StageGraph",
     "PipelinePlan", "PipelineRunner", "build_pipeline", "choose_slots",
-    "plan_interleave", "derive_sweeps_per_step", "sweep_cost_ops",
-    "graph_ops", "stage_ops", "registry", "sharding",
+    "plan_interleave", "derive_sweeps_per_step", "step_unit_ops",
+    "sweep_cost_ops", "graph_ops", "stage_ops", "registry", "sharding",
 ]

@@ -35,6 +35,24 @@ from repro.engine.registry import ServeSpec
 from repro.engine.stage import stage_ops
 
 
+def step_unit_ops(spec: ServeSpec, slots: int, *, data_shards: int = 1,
+                  model_shards: int = 1) -> list:
+    """Cost ops of ONE step unit of `spec` at this slot count.
+
+    The seam that makes the adSCH step pricing workload-generic: a spec may
+    declare its own ``step_ops`` (LM decode prices one token over the slot
+    batch); factorizer specs default to one resonator sweep.
+    """
+    if spec.step_ops is not None:
+        return spec.step_ops(slots, data_shards=data_shards,
+                             model_shards=model_shards)
+    if spec.cfg is None:
+        raise ValueError(f"spec {spec.name!r} has neither step_ops nor a "
+                         "FactorizerConfig to price a step from")
+    return sweep_cost_ops(spec.cfg, slots, data_shards=data_shards,
+                          model_shards=model_shards)
+
+
 def derive_sweeps_per_step(spec: ServeSpec, slots: int, hw=hw_model.COGSYS, *,
                            data_shards: int = 1, model_shards: int = 1) -> int:
     """Sweep burst between retirement scans, from adSCH runtime estimates.
@@ -47,10 +65,15 @@ def derive_sweeps_per_step(spec: ServeSpec, slots: int, hw=hw_model.COGSYS, *,
     the neural window scaled to its data-parallel slice — so a sharded
     engine's burst reflects that communication makes each sweep *longer*
     while row-sharding makes it *cheaper*.
+
+    The "sweep" is whatever the spec declares as one step unit: specs with
+    ``step_ops`` (e.g. ``lm_decode``, where a step is one decode token over
+    the slot batch and the neural window is the prefill stage) are priced by
+    those hints, factorizer specs by :func:`sweep_cost_ops`.
     """
     t_sweep = sch.schedule(
-        sweep_cost_ops(spec.cfg, slots, data_shards=data_shards,
-                       model_shards=model_shards), hw).makespan
+        step_unit_ops(spec, slots, data_shards=data_shards,
+                      model_shards=model_shards), hw).makespan
     if spec.graph is not None and t_sweep > 0:
         neural = [st for st in spec.graph.stages if not st.symbolic]
         n_ops = stage_ops(neural, 0) if neural else []
@@ -62,6 +85,20 @@ def derive_sweeps_per_step(spec: ServeSpec, slots: int, hw=hw_model.COGSYS, *,
             t_neural = sch.schedule(n_ops, hw).makespan
             return int(np.clip(round(t_neural / t_sweep), 1, 64))
     return 8
+
+
+def rolling_latency_ms(lats) -> dict:
+    """p50/p99 (in ms) of one drained latency window, ``None`` when empty.
+
+    The ONE percentile definition every serving stats surface uses
+    (``Engine.stats``, ``runtime.LMEngine.stats``, runtime telemetry
+    snapshots) — side-by-side reports must not disagree on interpolation.
+    """
+    if not lats:
+        return {"latency_p50_ms": None, "latency_p99_ms": None}
+    arr = np.asarray(lats)
+    return {"latency_p50_ms": float(np.percentile(arr, 50) * 1e3),
+            "latency_p99_ms": float(np.percentile(arr, 99) * 1e3)}
 
 
 @dataclasses.dataclass
@@ -105,6 +142,7 @@ class Engine:
         self.spec = spec
         self.slots = slots
         self.hw = hw
+        self._sweeps_pinned = sweeps_per_step is not None
         self.sweeps_per_step = (self._derive_sweeps_per_step()
                                 if sweeps_per_step is None else sweeps_per_step)
         self._key = key if key is not None else jax.random.PRNGKey(0)
@@ -119,6 +157,13 @@ class Engine:
         self.completed: dict = {}
         self.sweeps_total = 0
         self.steps_total = 0
+        self.resizes_total = 0
+        # All-time accounting kept incrementally: `completed` is a lookup the
+        # runtime may evict resolved requests from, so totals must not scan it.
+        self.completed_total = 0
+        self._lat_sum = 0.0
+        self._lat_window: list = []  # latencies since the last stats() snapshot
+        self._step_cost_cache: float | None = None
 
     def _derive_sweeps_per_step(self) -> int:
         return derive_sweeps_per_step(self.spec, self.slots, self.hw)
@@ -230,6 +275,9 @@ class Engine:
         req.result = req.factorization if self.spec.postprocess is None else \
             self.spec.postprocess(req.queries, req.factorization, req.meta)
         self.completed[req.id] = req
+        self.completed_total += 1
+        self._lat_sum += req.latency_s
+        self._lat_window.append(req.latency_s)
 
     def step(self) -> list:
         """Fill free slots, run one adSCH-sized sweep burst, retire converged
@@ -255,20 +303,103 @@ class Engine:
             raise RuntimeError("drain() exceeded max_steps")
         return sorted(out, key=lambda r: r.id)
 
+    # -- online re-tuning --------------------------------------------------
+
+    def resize(self, slots: int) -> None:
+        """Warm handoff to a resized ``[slots, F, D]`` state (online re-tune).
+
+        In-flight slot rows move into the new state verbatim — est / iters /
+        done / sim / per-row PRNG keys travel as host copies of the exact
+        device values — so a live request's remaining trajectory is the one
+        it would have run in the old state (rows are independent; which slot
+        index they occupy is irrelevant to the sweep math).  When shrinking
+        below the live-row count, the overflow rows go back to the *front*
+        of the queue and re-run from scratch once a slot frees: wasted
+        sweeps, but still bit-equal — the per-request key pins the entire
+        stochasticity stream, so a restarted row reproduces the same solo
+        ``factorize(q, key)`` trajectory.
+
+        Queued work is untouched.  The device programs are rebuilt at the new
+        slot count (``_build_programs`` — the same seam ShardedEngine
+        overrides, so a mesh engine re-tunes slots-per-shard identically) and
+        the sweep burst is re-derived unless the constructor pinned it.
+        """
+        if slots < 1:
+            raise ValueError(f"resize needs at least 1 slot, got {slots}")
+        if slots == self.slots:
+            return
+        live = [(s, self._owner[s]) for s in range(self.slots)
+                if self._owner[s] is not None]
+        keep, overflow = live[:slots], live[slots:]
+        for _, owner in reversed(overflow):  # preserve original order up front
+            self._queue.appendleft(owner)
+        # Host snapshots BEFORE the rebuild replaces the device arrays.
+        old_qs = np.asarray(self.qs)
+        old_state = jax.tree.map(np.asarray, self.state)
+        self.slots = slots
+        if not self._sweeps_pinned:
+            self.sweeps_per_step = self._derive_sweeps_per_step()
+        self._build_programs()  # fresh parked state + programs (or shard_map)
+        self._owner = [None] * slots
+        if keep:
+            rows = np.asarray([s for s, _ in keep])
+            for j, (_, owner) in enumerate(keep):
+                self._owner[j] = owner
+
+            def carry(new, old):
+                buf = np.asarray(new).copy()
+                if buf.ndim and buf.shape[0] == slots:
+                    buf[:len(rows)] = old[rows]
+                    return jax.device_put(buf, new.sharding)
+                return jax.device_put(old, new.sharding)  # global counters
+
+            self.qs = carry(self.qs, old_qs)
+            self.state = jax.tree.map(carry, self.state, old_state)
+        else:
+            self.state = self.state._replace(
+                it=jax.device_put(old_state.it, self.state.it.sharding))
+        self.resizes_total += 1
+        self._step_cost_cache = None
+
     # -- introspection -----------------------------------------------------
 
     @property
     def in_flight(self) -> int:
         return sum(o is not None for o in self._owner) + len(self._queue)
 
+    def step_cost_s(self) -> float:
+        """adSCH-modeled wall seconds of one ``step()`` burst (used by the
+        runtime's cost-weighted engine picking).  Cached — the inputs only
+        change on :meth:`resize`, and the runtime asks after every step."""
+        if self._step_cost_cache is None:
+            shards = getattr(self, "data_shards", 1), (
+                self.model_shards if getattr(self, "_rows", False) else 1)
+            ops = step_unit_ops(self.spec, self.slots, data_shards=shards[0],
+                                model_shards=shards[1])
+            t_unit = sch.schedule(ops, self.hw).makespan / self.hw.freq_hz
+            self._step_cost_cache = self.sweeps_per_step * t_unit
+        return self._step_cost_cache
+
     def stats(self) -> dict:
-        lats = [r.latency_s for r in self.completed.values()]
+        """Counters + ROLLING latency percentiles.
+
+        The percentiles cover only requests completed since the previous
+        ``stats()`` call (long-running runtimes would otherwise report
+        all-time p50/p99 forever); the totals — ``completed``, ``steps``,
+        ``sweeps_total``, all-time mean latency — keep accumulating (and are
+        tracked incrementally, so evicting entries from ``completed`` does
+        not distort them).
+        """
+        lats, self._lat_window = self._lat_window, []
         return {
             "slots": self.slots,
             "sweeps_per_step": self.sweeps_per_step,
             "steps": self.steps_total,
             "sweeps_total": self.sweeps_total,
-            "completed": len(self.completed),
-            "latency_p50_ms": float(np.percentile(lats, 50) * 1e3) if lats else None,
-            "latency_p99_ms": float(np.percentile(lats, 99) * 1e3) if lats else None,
+            "completed": self.completed_total,
+            "resizes": self.resizes_total,
+            "window_completed": len(lats),
+            **rolling_latency_ms(lats),
+            "latency_mean_all_ms": (self._lat_sum / self.completed_total * 1e3
+                                    if self.completed_total else None),
         }

@@ -1,12 +1,19 @@
-"""Built-in serving pipelines: NVSA RPM abduction and LVRF row decoding.
+"""Built-in serving pipelines: NVSA RPM abduction, LVRF row decoding, LM decode.
 
-Two deliberately different workloads behind the same ``Engine.submit/step/
-drain`` API — NVSA factorizes padded block-code attribute books (unitary
-algebra, F=3, M=10 padded, D=1024, stochastic Gauss-Seidel sweeps) and ranks
-RPM candidates through probabilistic abduction; LVRF decodes bipolar MAP row
-encodings against permutation-rolled value atoms (F=3, M=n_values, D=2048,
-deterministic).  The engine sees both as ServeSpecs; nothing in
-:mod:`repro.engine.engine` is NVSA-shaped.
+Two deliberately different factorization workloads behind the same
+``Engine.submit/step/drain`` API — NVSA factorizes padded block-code
+attribute books (unitary algebra, F=3, M=10 padded, D=1024, stochastic
+Gauss-Seidel sweeps) and ranks RPM candidates through probabilistic
+abduction; LVRF decodes bipolar MAP row encodings against permutation-rolled
+value atoms (F=3, M=n_values, D=2048, deterministic).  The engine sees both
+as ServeSpecs; nothing in :mod:`repro.engine.engine` is NVSA-shaped.
+
+``lm_decode`` is the third kind of workload: transformer serving
+(`launch/serve.ServeEngine`'s prefill/decode) re-expressed as a registered
+StageGraph + ``step_ops`` so the SAME adSCH machinery
+(:func:`repro.engine.build.plan_interleave`,
+:func:`repro.engine.engine.derive_sweeps_per_step`) prices LM steps; the
+request loop lives in :class:`repro.runtime.LMEngine`.
 """
 from __future__ import annotations
 
@@ -102,3 +109,64 @@ def lvrf_rows(key, *, cfg=None, rules=("constant", "progression_p1",
                 "reconstruction_sim": res.reconstruction_sim}
 
     return ServeSpec("lvrf_rows", cbs, fcfg, None, graph, postprocess)
+
+
+def lm_stack_ops(cfg, tokens: int, tag: str, *, symbolic: bool,
+                 lm_head: bool) -> tuple:
+    """adSCH cost hints for pushing ``tokens`` tokens through one LM stack.
+
+    Coarse by design (layers folded into the GEMM row dim, attention scored
+    as its projections): the scheduler only needs relative magnitudes to
+    size the decode burst against the prefill window.
+    """
+    d, L = cfg.d_model, cfg.n_layers
+    hd = cfg.head_dim if cfg.head_dim is not None else d // cfg.n_heads
+    d_ff_in = 2 * cfg.d_ff if cfg.mlp_kind == "swiglu" else cfg.d_ff
+    ops = [
+        Op(f"{tag}_qkv", "gemm",
+           (tokens * L, d, (cfg.n_heads + 2 * cfg.n_kv_heads) * hd),
+           symbolic=symbolic),
+        Op(f"{tag}_attn_out", "gemm", (tokens * L, cfg.n_heads * hd, d),
+           deps=(f"{tag}_qkv",), symbolic=symbolic),
+        Op(f"{tag}_mlp_in", "gemm", (tokens * L, d, d_ff_in),
+           deps=(f"{tag}_attn_out",), symbolic=symbolic),
+        Op(f"{tag}_mlp_out", "gemm", (tokens * L, cfg.d_ff, d),
+           deps=(f"{tag}_mlp_in",), symbolic=symbolic),
+    ]
+    if lm_head:
+        ops.append(Op(f"{tag}_lm_head", "gemm", (tokens, d, cfg.vocab),
+                      deps=(f"{tag}_mlp_out",), symbolic=symbolic))
+    return tuple(ops)
+
+
+@register("lm_decode")
+def lm_decode(key, *, cfg, batch: int = 4, prompt_len: int = 16) -> ServeSpec:
+    """LM continuous batching as a registered workload.
+
+    ``cfg`` is a :class:`repro.nn.transformer.ModelConfig`.  The StageGraph
+    maps LM serving onto the paper's interleave vocabulary: prefill is the
+    big dense block (neural — grabs large cell groups), per-token decode is
+    the small memory-bound kernel stream (declared ``symbolic`` so the
+    adSCH policy fills it into leftover cells while another request's
+    prefill owns the array — exactly the continuous-batching overlap
+    question of Fig. 13b).  ``step_ops`` prices ONE decode token over the
+    whole slot batch, so :func:`repro.engine.engine.derive_sweeps_per_step`
+    returns how many decode steps fit a prefill window — the burst
+    :class:`repro.runtime.LMEngine` runs between retirement scans, the same
+    slot accounting as the factorizer ``Engine``.
+    """
+    graph = StageGraph("lm_decode", (
+        Stage("prefill", None, symbolic=False,
+              cost_ops=lm_stack_ops(cfg, batch * prompt_len, "prefill",
+                                    symbolic=False, lm_head=False)),
+        Stage("decode", None, symbolic=True,
+              cost_ops=lm_stack_ops(cfg, batch, "decode", symbolic=True,
+                                    lm_head=True)),
+    ))
+
+    def step_ops(slots, *, data_shards=1, model_shards=1):
+        del model_shards  # LM tensor parallelism is out of the cell model's scope
+        return list(lm_stack_ops(cfg, -(-slots // data_shards), "decode",
+                                 symbolic=True, lm_head=True))
+
+    return ServeSpec("lm_decode", graph=graph, step_ops=step_ops)

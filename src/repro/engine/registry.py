@@ -24,19 +24,33 @@ from repro.core.factorizer import FactorizerConfig
 
 @dataclasses.dataclass(frozen=True)
 class ServeSpec:
-    """One servable workload (see module docstring)."""
+    """One servable workload (see module docstring).
+
+    ``codebooks``/``cfg`` describe the factorizer-kernel side and may be
+    ``None`` for workloads that are not resonator-shaped (the ``lm_decode``
+    spec serves transformer decode through :class:`repro.runtime.LMEngine`);
+    such specs must supply ``step_ops`` so the adSCH machinery can still
+    price one engine step.
+    """
 
     name: str
-    codebooks: Any  # [F, M, D] dense array or QTensor
-    cfg: FactorizerConfig
+    codebooks: Any = None  # [F, M, D] dense array or QTensor
+    cfg: FactorizerConfig | None = None
     valid_mask: Any = None  # [F, M] bool or None
     graph: Any = None  # StageGraph | None — stream lowering + cost estimates
     # (queries [k, D], FactorizerResult over the k queries, meta) -> answer
     postprocess: Callable | None = None
+    # (slots, *, data_shards=1, model_shards=1) -> list[Op]: cost hints for
+    # ONE engine step unit (a resonator sweep / an LM decode step).  When
+    # None, engines fall back to factorizer.sweep_cost_ops(cfg, ...).
+    step_ops: Callable | None = None
 
     @property
     def dim(self) -> int:
         cb = self.codebooks
+        if cb is None:
+            raise ValueError(f"spec {self.name!r} has no codebooks (not a "
+                             "factorizer workload)")
         values = getattr(cb, "values", cb)
         return values.shape[-1]
 

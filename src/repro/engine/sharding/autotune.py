@@ -109,3 +109,38 @@ def choose_slots(spec, *, arrival_rps: float | None = None,
         if rate[b] < knee_gain * rate[a]:
             return a
     return cands[-1]
+
+
+def retune_slots(engine, arrival_rps: float, *,
+                 candidates=DEFAULT_CANDIDATES, mean_iters: float | None = None,
+                 headroom: float = 1.25, measured_sweep_s=None) -> int | None:
+    """Online re-tune entry point: re-run :func:`choose_slots` against a live
+    engine's current shape and a FRESH arrival-rate estimate (the runtime's
+    EWMA over submit timestamps).
+
+    Returns the new GLOBAL slot count when it differs from the engine's
+    current one (ready to hand to :meth:`repro.engine.Engine.resize`), else
+    ``None``.  Works for both the single-device ``Engine`` (shards default
+    to 1) and ``ShardedEngine`` (slots-per-shard re-chosen, scaled back up
+    by the data axis so divisibility is preserved by construction).
+
+    ``measured_sweep_s`` replaces the analytic sweep cost exactly as in
+    :func:`choose_slots`; pass ``True`` to time the spec's actual compiled
+    sweep per candidate (:func:`measure_sweep_seconds`) — the honest cost
+    basis when re-tuning on the machine that is serving.
+    """
+    if engine.spec.cfg is None:
+        return None  # not a factorizer engine; nothing for choose_slots to price
+    data = getattr(engine, "data_shards", 1)
+    model = (engine.model_shards
+             if getattr(engine, "_rows", False) else 1)
+    if measured_sweep_s is True:
+        spec = engine.spec
+        measured_sweep_s = lambda n: measure_sweep_seconds(spec, n)
+    per_shard = choose_slots(engine.spec, arrival_rps=arrival_rps,
+                             data_shards=data, model_shards=model,
+                             hw=engine.hw, candidates=candidates,
+                             mean_iters=mean_iters, headroom=headroom,
+                             measured_sweep_s=measured_sweep_s)
+    total = per_shard * data
+    return None if total == engine.slots else total

@@ -173,6 +173,14 @@ class ShardedEngine(Engine):
         self.state = jax.tree.map(put, st, state_spec,
                                   is_leaf=lambda x: isinstance(x, P))
 
+    def resize(self, slots: int) -> None:
+        """Warm handoff re-tune (see :meth:`Engine.resize`); the new global
+        slot count must still tile over the data axis."""
+        if slots % self.data_shards:
+            raise ValueError(f"resize({slots}) must divide by the data axis "
+                             f"size ({self.data_shards})")
+        super().resize(slots)
+
     def stats(self) -> dict:
         st = super().stats()
         st.update({"mesh": dict(self.mesh.shape),

@@ -30,6 +30,13 @@ class ServeEngine:
         self.slots = batch_slots
         self.active = np.zeros(batch_slots, bool)
         self.generated: list = [[] for _ in range(batch_slots)]
+        # Host mirror of each slot's KV length + capacity parking flags: a
+        # decode step writes KV at position len, so a slot at len == max_len
+        # must NOT step again — the dynamic_update_slice would silently clamp
+        # and corrupt the last cache position.  step() parks such slots
+        # (active=False, overflowed=True) instead.
+        self.lens = np.zeros(batch_slots, np.int64)
+        self.overflowed = np.zeros(batch_slots, bool)
         # One decode step with the active-slot select fused into the jitted
         # program: inactive slots keep their old cache rows (their dummy
         # token must not advance the KV length a later add_request prefills
@@ -65,6 +72,12 @@ class ServeEngine:
         """
         if prompt.shape[0] == 0:  # nothing to serve; leave the slot parked
             return None
+        if prompt.shape[0] > self.max_len:
+            # prompt[:-1] prefills and the seeded last token still needs a KV
+            # position on the first step(): len(prompt) rows of cache total
+            raise ValueError(
+                f"prompt of {prompt.shape[0]} tokens exceeds the cache "
+                f"capacity max_len={self.max_len}")
         self.cache = jax.tree.map(
             lambda c, f: c.at[:, slot].set(f[:, slot]),
             self.cache, self._fresh_cache)
@@ -74,15 +87,29 @@ class ServeEngine:
                 self.params, self.cache, prompt[t], jnp.int32(slot))
         self.active[slot] = True
         self.generated[slot] = [int(prompt[-1])]
+        self.lens[slot] = prompt.shape[0] - 1
+        self.overflowed[slot] = False
         return None if logits is None else logits[slot]
 
     def step(self, sampler="greedy", temperature=1.0, key=None):
-        """One decode step for the active slots; returns sampled tokens."""
+        """One decode step for the active slots; returns sampled tokens.
+
+        Slots whose cache is full are parked first (``active`` cleared,
+        ``overflowed`` set) — continuing to decode them would write KV past
+        ``max_len``.  Returns ``None`` when parking leaves nothing active.
+        """
+        full = self.active & (self.lens >= self.max_len)
+        if full.any():
+            self.active[full] = False
+            self.overflowed[full] = True
+        if not self.active.any():
+            return None
         last = jnp.asarray([
             self.generated[s][-1] if self.generated[s] else 0
             for s in range(self.slots)], dtype=jnp.int32)[:, None]
         logits, self.cache = self._decode(self.params, self.cache, last,
                                           jnp.asarray(self.active))
+        self.lens[self.active] += 1
         if sampler == "greedy":
             nxt = jnp.argmax(logits[:, -1], axis=-1)
         else:

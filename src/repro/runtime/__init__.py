@@ -1,0 +1,41 @@
+"""repro.runtime — the online serving runtime above the engines.
+
+The subsystem that turns the request-level engines into a served system
+(NSFlow's end-to-end argument; paper Sec. VI at system scope): a background
+stepper thread drives any mix of :class:`repro.engine.Engine`,
+:class:`repro.engine.ShardedEngine`, and :class:`LMEngine` instances through
+the structural :class:`Steppable` protocol, with
+
+  * futures-based async ``submit`` (``Runtime.submit`` returns immediately,
+    ``Runtime.result(id)`` blocks),
+  * cost-weighted stepping (adSCH-modeled step cost x queue depth picks the
+    next engine, so cheap symbolic bursts aren't starved by LM decode),
+  * per-engine EWMA arrival-rate telemetry over submit timestamps, and
+  * online re-tuning: drift past a :class:`RetunePolicy` threshold re-runs
+    ``choose_slots`` and applies the verdict via the engines' warm-handoff
+    ``resize`` — bit-equality of in-flight trajectories preserved.
+
+Typical use::
+
+    from repro import runtime as rt
+    r = rt.Runtime()
+    r.register("lvrf", engine.Engine(spec, slots=16),
+               retune=rt.RetunePolicy(threshold=1.5))
+    r.register("lm", rt.LMEngine(cfg, params, slots=4, max_len=128))
+    with r:
+        rid = r.submit("lvrf", row_vec)
+        tid = r.submit("lm", prompt_tokens, max_new_tokens=16)
+        print(r.result(rid).result, r.result(tid).result["tokens"])
+"""
+from repro.runtime.lm import LMEngine, LMRequest
+from repro.runtime.protocol import (Steppable, step_cost_seconds,
+                                    supports_resize)
+from repro.runtime.runtime import RetunePolicy, Runtime
+from repro.runtime.telemetry import (ArrivalEstimator, EngineTelemetry,
+                                     should_retune)
+
+__all__ = [
+    "ArrivalEstimator", "EngineTelemetry", "LMEngine", "LMRequest",
+    "RetunePolicy", "Runtime", "Steppable", "should_retune",
+    "step_cost_seconds", "supports_resize",
+]

@@ -1,0 +1,196 @@
+"""LMEngine: transformer serving behind the engine-style Steppable API.
+
+Retires the ROADMAP item "serve the LM ``ServeEngine`` (launch/serve.py)
+through the engine API".  ``launch/serve.ServeEngine`` stays the device
+layer (masked batch decode over a shared KV cache, per-slot prefill); this
+adapter adds the request layer the factorizer ``Engine`` already has —
+queueing, slot ownership, burst-scan retirement, per-request latency
+accounting — so one :class:`repro.runtime.Runtime` can interleave LM decode
+with symbolic factorization engines.
+
+The adSCH connection runs through the registered ``lm_decode`` spec
+(:mod:`repro.engine.pipelines`): its StageGraph declares prefill as the
+neural block and per-token decode as the sliver-filling stream, and its
+``step_ops`` price one decode token over the slot batch — so the SAME
+:func:`repro.engine.engine.derive_sweeps_per_step` that sizes resonator
+sweep bursts sizes the decode burst between retirement scans here
+(``decode_per_step``), and :func:`plan_interleave` prices the
+prefill/decode boundary like any other stage boundary.
+
+Retirement is at burst granularity (like the factorizer engine's sweep
+bursts): a slot may overshoot its stop condition by up to
+``decode_per_step - 1`` tokens; the finished request's ``tokens`` are
+trimmed to ``max_new_tokens`` / first EOS, and a slot parked by the device
+layer's KV-capacity guard retires with ``truncated=True``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Any
+
+import jax.numpy as jnp
+
+from repro.cogsim import model as hw_model
+from repro.core import scheduler as sch
+from repro.engine import registry
+from repro.engine.engine import (derive_sweeps_per_step, rolling_latency_ms,
+                                 step_unit_ops)
+from repro.launch.serve import ServeEngine
+
+
+@dataclasses.dataclass
+class LMRequest:
+    """One submitted generation request."""
+
+    id: int
+    prompt: Any  # [T] int32 tokens
+    max_new_tokens: int
+    meta: Any
+    submit_time: float
+    tokens: list = dataclasses.field(default_factory=list)  # generated ids
+    result: Any = None  # {"tokens": ..., "text_len": ...} convenience dict
+    truncated: bool = False  # KV capacity parked the slot before a stop
+    done_time: float | None = None
+
+    @property
+    def latency_s(self) -> float | None:
+        return None if self.done_time is None else \
+            self.done_time - self.submit_time
+
+
+class LMEngine:
+    """``submit()/step()/drain()`` continuous batching over ``ServeEngine``.
+
+    Satisfies :class:`repro.runtime.protocol.Steppable`; requests are token
+    prompts instead of query vectors, results are generated token lists.
+    """
+
+    def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 128,
+                 prompt_len_hint: int = 16, decode_per_step: int | None = None,
+                 eos_id: int | None = None, hw=hw_model.COGSYS):
+        self.cfg, self.hw = cfg, hw
+        self.slots = slots
+        self.eos_id = eos_id
+        self.spec = registry.build("lm_decode", None, cfg=cfg, batch=slots,
+                                   prompt_len=prompt_len_hint)
+        self.serve = ServeEngine(cfg, params, slots, max_len)
+        self.decode_per_step = (
+            derive_sweeps_per_step(self.spec, slots, hw)
+            if decode_per_step is None else decode_per_step)
+        self._owner: list = [None] * slots  # LMRequest | None
+        self._queue: deque = deque()
+        self._next_id = 0
+        self.completed: dict = {}
+        self.completed_total = 0  # all-time (runtime may evict `completed`)
+        self.steps_total = 0
+        self.tokens_total = 0
+        self._lat_window: list = []
+        ops = step_unit_ops(self.spec, slots)
+        self._step_cost = self.decode_per_step * (
+            sch.schedule(ops, hw).makespan / hw.freq_hz)
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, prompt, *, max_new_tokens: int = 32, meta=None) -> int:
+        """Enqueue one prompt; returns the request id.  Prompts that cannot
+        fit the KV cache at all are rejected here (the per-token capacity
+        guard then parks slots that fill up mid-generation)."""
+        prompt = jnp.asarray(prompt, jnp.int32)
+        if prompt.ndim != 1 or prompt.shape[0] == 0:
+            raise ValueError("submit expects a non-empty 1-D token prompt")
+        if prompt.shape[0] > self.serve.max_len:
+            raise ValueError(
+                f"prompt of {prompt.shape[0]} tokens exceeds the engine's "
+                f"KV capacity max_len={self.serve.max_len}")
+        req = LMRequest(self._next_id, prompt, int(max_new_tokens), meta,
+                        time.perf_counter())
+        self._next_id += 1
+        self._queue.append(req)
+        return req.id
+
+    # -- serving loop ------------------------------------------------------
+
+    def _fill(self) -> None:
+        for slot in range(self.slots):
+            if self._owner[slot] is not None or not self._queue:
+                continue
+            req = self._queue.popleft()
+            self._owner[slot] = req
+            self.serve.add_request(slot, req.prompt)
+
+    def _stop_at(self, req: LMRequest, produced: list) -> int | None:
+        """Index (exclusive) to trim `produced` at, or None if not done."""
+        if self.eos_id is not None and self.eos_id in produced:
+            return min(produced.index(self.eos_id) + 1, req.max_new_tokens)
+        if len(produced) >= req.max_new_tokens:
+            return req.max_new_tokens
+        return None
+
+    def _retire(self) -> list:
+        finished = []
+        for slot in range(self.slots):
+            req = self._owner[slot]
+            if req is None:
+                continue
+            # generated[0] is the seeded last prompt token, not an output
+            produced = self.serve.generated[slot][1:]
+            stop = self._stop_at(req, produced)
+            if stop is None and not self.serve.overflowed[slot]:
+                continue
+            req.truncated = stop is None  # parked at KV capacity
+            req.tokens = produced[:stop] if stop is not None else produced
+            req.done_time = time.perf_counter()
+            req.result = {"tokens": req.tokens, "truncated": req.truncated}
+            self.tokens_total += len(req.tokens)
+            self.completed[req.id] = req
+            self.completed_total += 1
+            self._lat_window.append(req.latency_s)
+            self._owner[slot] = None
+            self.serve.active[slot] = False
+            finished.append(req)
+        return finished
+
+    def step(self) -> list:
+        """Fill free slots (prefill), run one adSCH-sized decode burst,
+        retire finished slots.  Returns the requests completed this step."""
+        self._fill()
+        if all(o is None for o in self._owner):
+            return []
+        for _ in range(self.decode_per_step):
+            if self.serve.step() is None:  # every live slot parked at capacity
+                break
+        self.steps_total += 1
+        return self._retire()
+
+    def drain(self, max_steps: int = 100_000) -> list:
+        out = []
+        for _ in range(max_steps):
+            if not self._queue and all(o is None for o in self._owner):
+                break
+            out += self.step()
+        else:
+            raise RuntimeError("drain() exceeded max_steps")
+        return sorted(out, key=lambda r: r.id)
+
+    # -- introspection -----------------------------------------------------
+
+    @property
+    def in_flight(self) -> int:
+        return sum(o is not None for o in self._owner) + len(self._queue)
+
+    def step_cost_s(self) -> float:
+        return self._step_cost
+
+    def stats(self) -> dict:
+        lats, self._lat_window = self._lat_window, []
+        return {
+            "slots": self.slots,
+            "decode_per_step": self.decode_per_step,
+            "steps": self.steps_total,
+            "completed": self.completed_total,
+            "tokens_total": self.tokens_total,
+            "window_completed": len(lats),
+            **rolling_latency_ms(lats),
+        }

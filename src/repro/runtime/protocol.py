@@ -1,0 +1,70 @@
+"""The ``Steppable`` protocol: what the runtime needs from an engine.
+
+The online runtime (:mod:`repro.runtime.runtime`) orchestrates heterogeneous
+engines — the factorizer ``Engine``, its mesh-parallel ``ShardedEngine``, and
+the LM adapter :class:`repro.runtime.lm.LMEngine` — through one structural
+interface.  Anything that slots requests into a fixed device-resident batch
+and advances it in host-scanned bursts fits:
+
+  * ``submit(payload, **kw) -> int`` — enqueue one request, return its
+    engine-local id (must not block on device work);
+  * ``step() -> list`` — fill free slots, run one adSCH-sized burst, retire;
+    returns the request objects completed by this step (each carrying
+    ``.id`` and ``.result``);
+  * ``drain() -> list`` — run until idle (synchronous fallback path);
+  * ``in_flight`` — queued + slotted requests not yet completed;
+  * ``stats() -> dict`` — counters + rolling latency percentiles.
+
+Engines are NOT thread-safe; the runtime serializes every mutating call
+(``submit``/``step``/``resize``/``stats``) onto its stepper thread and one
+lock.  The protocol is structural (no inheritance): ``Engine`` and
+``ShardedEngine`` already satisfy it unmodified.
+
+Two optional members refine the runtime's behavior when present:
+
+  * ``step_cost_s() -> float`` — adSCH-modeled wall seconds of one ``step()``
+    burst, feeding the cost-weighted engine picking
+    (:func:`step_cost_seconds` provides the fallback);
+  * ``resize(slots)`` — warm-handoff slot re-tune, the hook the EWMA-driven
+    re-tuner calls (engines without it are never re-tuned).
+"""
+from __future__ import annotations
+
+from typing import Protocol, runtime_checkable
+
+DEFAULT_STEP_COST_S = 1e-3
+
+
+@runtime_checkable
+class Steppable(Protocol):
+    """Structural interface every runtime-managed engine satisfies."""
+
+    def submit(self, payload, **kwargs) -> int: ...
+
+    def step(self) -> list: ...
+
+    def drain(self) -> list: ...
+
+    @property
+    def in_flight(self) -> int: ...
+
+    def stats(self) -> dict: ...
+
+
+def step_cost_seconds(engine) -> float:
+    """Modeled seconds of one ``step()`` of `engine`, with a neutral fallback
+    for engines that don't expose ``step_cost_s`` (they then round-robin at
+    equal weight)."""
+    fn = getattr(engine, "step_cost_s", None)
+    if fn is None:
+        return DEFAULT_STEP_COST_S
+    try:
+        cost = float(fn())
+    except (ValueError, TypeError):
+        return DEFAULT_STEP_COST_S
+    return cost if cost > 0 else DEFAULT_STEP_COST_S
+
+
+def supports_resize(engine) -> bool:
+    """Whether the EWMA re-tuner may call ``engine.resize``."""
+    return callable(getattr(engine, "resize", None))

@@ -1,0 +1,335 @@
+"""Runtime: async multi-engine orchestration with workload-aware re-tuning.
+
+The production entry point of the system (ROADMAP: "async ``submit`` path
+for online serving").  One background stepper thread owns every registered
+engine; callers submit from any thread and block on per-request futures:
+
+    rt = Runtime()
+    rt.register("lvrf", Engine(spec, slots=16), retune=RetunePolicy())
+    rt.register("lm", LMEngine(cfg, params))
+    with rt:                       # starts/stops the stepper thread
+        rid = rt.submit("lvrf", row_vec)        # returns immediately
+        req = rt.result(rid, timeout=30)        # blocks on the future
+
+Three mechanisms, one loop:
+
+**Cost-weighted stepping.**  Engines accrue *virtual time*: stepping engine
+e advances ``vt[e]`` by its adSCH-modeled step cost divided by its backlog,
+and the loop always steps the busy engine with the smallest ``vt``.  Cheap
+steps and deep queues both earn more turns — a symbolic engine whose sweep
+burst is 100x cheaper than an LM decode burst gets ~100x the steps instead
+of alternating 1:1 behind it (the starvation the ISSUE names), and within
+equal costs the deeper backlog is served first.
+
+**Telemetry.**  Every ``submit`` stamps the per-engine EWMA arrival
+estimator (:mod:`repro.runtime.telemetry`); every step updates utilization
+and queue-depth counters.  ``stats()`` merges engine and telemetry views.
+
+**Online re-tuning.**  When an engine's arrival estimate drifts past its
+:class:`RetunePolicy` threshold, the loop re-runs
+:func:`repro.engine.sharding.autotune.retune_slots` (the same ``choose_slots``
+model that sized the engine offline) and applies the verdict via the
+engine's warm-handoff ``resize`` — in-flight rows carry over bit-exactly,
+so a re-tune is invisible to request trajectories (asserted in
+tests/test_runtime.py).
+
+Thread-safety contract: engines are single-threaded; ONLY the stepper
+thread touches them (submissions are staged in a thread-safe pending queue
+and ingested on-thread).  ``Runtime.stats``/``drain`` synchronize through
+the same lock the stepper holds per iteration.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from concurrent.futures import Future, TimeoutError as FutureTimeout
+
+from repro.engine.sharding.autotune import retune_slots
+from repro.runtime import telemetry as tele
+from repro.runtime.protocol import step_cost_seconds, supports_resize
+
+
+@dataclasses.dataclass(frozen=True)
+class RetunePolicy:
+    """When and how an engine's slot count follows its arrival rate."""
+
+    threshold: float = 1.5  # drift ratio (either direction) that re-tunes
+    check_every: int = 4  # steps of THIS engine between drift checks
+    baseline_rps: float | None = None  # None: first check sets the baseline
+    headroom: float = 1.25  # forwarded to choose_slots
+    candidates: tuple | None = None  # None: autotune defaults
+    # True: price candidates by timing the actual compiled sweep instead of
+    # the analytic model (stalls the stepper for the measurement but reflects
+    # the machine that is really serving; see autotune.measure_sweep_seconds)
+    use_measured_cost: bool = False
+
+
+class Runtime:
+    """Async serving frontend over one or more ``Steppable`` engines."""
+
+    def __init__(self, *, clock=time.monotonic, idle_sleep_s: float = 1e-3):
+        self._clock = clock
+        self._idle_sleep_s = idle_sleep_s
+        self._engines: dict = {}
+        self._policies: dict = {}
+        self.telemetry: dict = {}
+        self._vt: dict = {}  # virtual time per engine (cost-weighted fairness)
+        self._vclock = 0.0  # service level of the last-stepped engine
+        self._was_busy: set = set()
+        self._steps_since_check: dict = {}
+        self._pending: deque = deque()  # (name, gid, payload, kwargs)
+        self._futures: dict = {}  # gid -> Future
+        self._gid_of: dict = {}  # (name, engine-local id) -> gid
+        self._next_gid = 0
+        self._lock = threading.Lock()  # serializes all engine access
+        self._submit_lock = threading.Lock()  # tiny: gid + telemetry stamps
+        self._wake = threading.Event()
+        self._thread: threading.Thread | None = None
+        self._running = False
+        self._stopped = False  # stop() was called; submits must not hang
+        self._error: BaseException | None = None
+
+    # -- registration ------------------------------------------------------
+
+    def register(self, name: str, engine, *,
+                 retune: RetunePolicy | None = None) -> None:
+        """Add an engine under `name`.  ``retune`` opts it into EWMA-driven
+        slot re-tuning (requires a ``resize``-capable engine)."""
+        if name in self._engines:
+            raise ValueError(f"engine {name!r} already registered")
+        if retune is not None and not supports_resize(engine):
+            raise ValueError(f"engine {name!r} has no resize(); it cannot "
+                             "opt into re-tuning")
+        with self._lock:
+            self._engines[name] = engine
+            self._policies[name] = retune
+            t = tele.EngineTelemetry()
+            if retune is not None and retune.baseline_rps is not None:
+                t.mark_tuned(retune.baseline_rps)
+            self.telemetry[name] = t
+            self._vt[name] = 0.0
+            self._steps_since_check[name] = 0
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def start(self) -> "Runtime":
+        if self._thread is not None:
+            raise RuntimeError("runtime already started")
+        self._running = True
+        self._stopped = False
+        self._thread = threading.Thread(target=self._loop,
+                                        name="repro-runtime-stepper",
+                                        daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self, timeout: float = 30.0) -> None:
+        """Stop the stepper.  Unfinished requests' futures fail with
+        RuntimeError rather than hanging a later ``result()`` — call
+        :meth:`drain` first if the work should complete."""
+        self._stopped = True
+        self._running = False
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        # Fail what's unfinished (their futures stay retrievable via
+        # result(), which surfaces the error) and drop the stale request
+        # bookkeeping: a later start() must not let an engine-completed OLD
+        # request hit an already-excepted future (Future.set_result would
+        # raise InvalidStateError and kill the restarted stepper).
+        with self._submit_lock:
+            unfinished = [f for f in self._futures.values() if not f.done()]
+        for fut in unfinished:
+            fut.set_exception(RuntimeError("runtime stopped with the "
+                                           "request unfinished"))
+        self._pending.clear()
+        self._gid_of.clear()
+
+    def __enter__(self) -> "Runtime":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- submission / results ----------------------------------------------
+
+    def submit(self, engine: str, payload, **kwargs) -> int:
+        """Enqueue a request for `engine`; returns a runtime-global id
+        immediately (the stepper thread performs the actual engine.submit).
+        """
+        if engine not in self._engines:
+            raise KeyError(f"unknown engine {engine!r}; registered: "
+                           f"{sorted(self._engines)}")
+        if self._error is not None:
+            raise RuntimeError("runtime stepper died") from self._error
+        if self._stopped:
+            raise RuntimeError("runtime is stopped; nothing would serve "
+                               "this request")
+        fut: Future = Future()
+        with self._submit_lock:
+            gid = self._next_gid
+            self._next_gid += 1
+            self._futures[gid] = fut
+            self.telemetry[engine].on_submit(self._clock())
+        self._pending.append((engine, gid, payload, kwargs))
+        self._wake.set()
+        # Close the race with a concurrently-dying or concurrently-stopping
+        # stepper: if it drained/snapshotted _pending before our append,
+        # nothing will ever resolve this future — fail it here instead of
+        # hanging result(timeout=None).
+        if (self._error is not None or self._stopped) and not fut.done():
+            fut.set_exception(RuntimeError(
+                "runtime stepper died" if self._error is not None
+                else "runtime stopped with the request unfinished"))
+        return gid
+
+    def result(self, gid: int, timeout: float | None = None):
+        """Block until request `gid` completes; returns the engine's request
+        object (``.result`` holds the workload answer).
+
+        Retrieval CONSUMES the handle (the runtime would otherwise
+        accumulate one resolved future per request forever); asking again
+        raises KeyError.  A timeout or failure leaves the handle retrievable.
+        """
+        try:
+            fut = self._futures[gid]
+        except KeyError:
+            raise KeyError(f"unknown request id {gid}") from None
+        try:
+            out = fut.result(timeout)
+        except FutureTimeout:
+            raise TimeoutError(
+                f"request {gid} not completed within {timeout}s") from None
+        with self._submit_lock:
+            self._futures.pop(gid, None)
+        return out
+
+    def drain(self, timeout: float | None = None) -> list:
+        """Block until every currently-outstanding request has completed;
+        returns (and consumes, like :meth:`result`) their request objects in
+        submission (gid) order."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._submit_lock:  # snapshot: submit() mutates the dict
+            gids = sorted(self._futures)
+        out = []
+        for gid in gids:
+            left = None if deadline is None else deadline - time.monotonic()
+            if left is not None and left <= 0:
+                raise TimeoutError("drain() timed out")
+            try:
+                out.append(self.result(gid, left))
+            except KeyError:  # consumed by a concurrent result() call
+                continue
+        return out
+
+    def stats(self) -> dict:
+        """Per-engine merged engine + telemetry snapshot."""
+        with self._lock, self._submit_lock:
+            now = self._clock()
+            return {name: {**eng.stats(),
+                           "telemetry": self.telemetry[name].snapshot(now)}
+                    for name, eng in self._engines.items()}
+
+    # -- stepper thread ----------------------------------------------------
+
+    def _ingest(self) -> None:
+        while self._pending:
+            name, gid, payload, kwargs = self._pending.popleft()
+            try:
+                local = self._engines[name].submit(payload, **kwargs)
+            except Exception as e:  # bad request: fail ITS future, keep serving
+                self._futures[gid].set_exception(e)
+                continue
+            self._gid_of[(name, local)] = gid
+
+    def _pick(self) -> str | None:
+        busy = [n for n, e in self._engines.items() if e.in_flight > 0]
+        if not busy:
+            self._was_busy.clear()
+            return None
+        # Start-time clamp (SFQ-style): an engine entering service after an
+        # idle stretch resumes at the CURRENT service level instead of its
+        # stale vt — otherwise a long-idle engine arrives with a huge virtual
+        # deficit and monopolizes the stepper until it "catches up".
+        for n in busy:
+            if n not in self._was_busy:
+                self._vt[n] = max(self._vt[n], self._vclock)
+        self._was_busy = set(busy)
+        name = min(busy, key=lambda n: self._vt[n])
+        self._vclock = self._vt[name]
+        return name
+
+    def _step_one(self, name: str) -> None:
+        eng = self._engines[name]
+        finished = eng.step()
+        backlog = eng.in_flight + len(finished)
+        self._vt[name] += step_cost_seconds(eng) / max(1, backlog)
+        t = self.telemetry[name]
+        slots = getattr(eng, "slots", None)
+        busy = (min(1.0, backlog / slots) if slots else 0.0)
+        t.on_step(busy, eng.in_flight)
+        for req in finished:
+            t.on_complete(getattr(req, "latency_s", 0.0) or 0.0)
+            gid = self._gid_of.pop((name, req.id), None)
+            fut = None if gid is None else self._futures.get(gid)
+            if fut is not None and not fut.done():
+                fut.set_result(req)
+            # the future now owns the result; drop the engine's reference so
+            # a long-running runtime doesn't accumulate every Request ever
+            # served (engines keep their all-time counters regardless)
+            getattr(eng, "completed", {}).pop(req.id, None)
+        self._steps_since_check[name] += 1
+
+    def _maybe_retune(self, name: str) -> None:
+        policy = self._policies[name]
+        if policy is None:
+            return
+        if self._steps_since_check[name] < policy.check_every:
+            return
+        self._steps_since_check[name] = 0
+        t = self.telemetry[name]
+        with self._submit_lock:  # estimator writes happen on submit()
+            rate = t.arrivals.rate(self._clock())
+        if t.tuned_rate is None:  # first check anchors the drift baseline
+            if rate > 0:
+                t.mark_tuned(rate)
+            return
+        if not tele.should_retune(rate, t.tuned_rate, policy.threshold):
+            return
+        kw = {"headroom": policy.headroom,
+              "measured_sweep_s": policy.use_measured_cost or None}
+        if policy.candidates is not None:
+            kw["candidates"] = policy.candidates
+        new_slots = retune_slots(self._engines[name], rate, **kw)
+        if new_slots is not None:
+            self._engines[name].resize(new_slots)
+            t.retunes += 1
+        t.mark_tuned(rate)  # re-anchor either way; drift is vs the decision
+
+    def _loop(self) -> None:
+        try:
+            while self._running:
+                with self._lock:
+                    self._ingest()
+                    name = self._pick()
+                    if name is not None:
+                        self._step_one(name)
+                        self._maybe_retune(name)
+                if name is None:
+                    self._wake.wait(self._idle_sleep_s)
+                    self._wake.clear()
+        except BaseException as e:  # fail every outstanding future loudly
+            self._error = e
+            for key, gid in list(self._gid_of.items()):
+                fut = self._futures.get(gid)
+                if fut is not None and not fut.done():
+                    fut.set_exception(e)
+            self._gid_of.clear()
+            while self._pending:
+                _, gid, _, _ = self._pending.popleft()
+                fut = self._futures.get(gid)
+                if fut is not None and not fut.done():
+                    fut.set_exception(e)

@@ -114,6 +114,59 @@ def test_sharded_engine_bit_equals_engine_lvrf_both_placements():
     assert r["solo_iters"] == r["req0_iters"]
 
 
+def test_sharded_resize_warm_handoff_on_mesh():
+    """Online re-tune on the mesh: grow 8->16 and shrink ->4 global slots
+    mid-flight (junk rows in flight both times); every request stays
+    bit-equal to a solo factorize(), and an invalid slot count (not a
+    multiple of the data axis) is rejected."""
+    r = run_with_devices(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro import engine
+        from repro.core import factorizer as fz
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import lvrf
+
+        spec = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0))
+        cfg = lvrf.LVRFConfig()
+        atoms = lvrf.init_atoms(jax.random.split(jax.random.PRNGKey(0))[0], cfg)
+        rng = np.random.default_rng(1)
+        vals = jnp.asarray(rng.integers(0, cfg.n_values, (8, 3)))
+        good = lvrf.encode_row(atoms, vals, cfg)
+        junk = jnp.asarray(rng.normal(size=(4, cfg.vsa.dim)), jnp.float32)
+        keys = jax.random.split(jax.random.PRNGKey(7), 8)
+
+        mesh = make_host_mesh(4, 2)
+        eng = engine.ShardedEngine(spec, mesh=mesh, slots=8, sweeps_per_step=2)
+        ids = [eng.submit(good[i], keys=keys[i][None]) for i in range(8)]
+        for j in range(4):
+            eng.submit(junk[j])
+        fin = list(eng.step())
+        eng.resize(16)
+        fin += eng.step()
+        bad = False
+        try:
+            eng.resize(6)
+        except ValueError:
+            bad = True
+        eng.resize(4)
+        fin += eng.drain()
+        done = {r.id: r for r in fin}
+        ok = True
+        for i in range(8):
+            solo = fz.factorize(good[i], spec.codebooks, keys[i], spec.cfg,
+                                spec.valid_mask)
+            req = done[ids[i]]
+            ok &= int(req.iterations[0]) == int(solo.iterations)
+            ok &= bool((np.asarray(req.factorization.indices[0])
+                        == np.asarray(solo.indices)).all())
+        print(json.dumps({"ok": ok, "bad_rejected": bad,
+                          "resizes": eng.resizes_total,
+                          "completed": len(done)}))
+    """))
+    assert r["ok"] and r["bad_rejected"]
+    assert r["resizes"] == 2 and r["completed"] == 12
+
+
 def test_sharded_engine_nvsa_4x2_mesh():
     """NVSA abduction through ShardedEngine on 4x2: replicated placement is
     bit-identical to nvsa.solve (like the single-device engine test); rows

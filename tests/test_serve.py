@@ -1,7 +1,9 @@
-"""ServeEngine continuous-batching regressions: prefill slot isolation."""
+"""ServeEngine continuous-batching regressions: prefill slot isolation and
+KV-capacity parking."""
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
 
 from repro.configs.registry import ARCHS
 from repro.launch.serve import ServeEngine
@@ -59,6 +61,47 @@ def test_empty_prompt_returns_none():
     # one-token prompt: nothing to prefill, the token is fed by step()
     assert eng.add_request(1, jnp.asarray([7], jnp.int32)) is None
     assert eng.generated[1] == [7]
+
+
+def test_decode_parks_slot_at_kv_capacity():
+    """Decoding past max_len must park the slot, not silently clamp the KV
+    write onto the last cache position."""
+    cfg, params, eng = _engine(slots=2, max_len=8)
+    eng.add_request(0, jax.random.randint(jax.random.PRNGKey(7), (5,), 0,
+                                          cfg.vocab))
+    for _ in range(4):  # len 4 -> 8: exactly the remaining capacity
+        assert eng.step() is not None
+    assert eng.active[0] and eng.lens[0] == 8 and not eng.overflowed[0]
+    before = [np.asarray(leaf).copy() for leaf in jax.tree.leaves(eng.cache)]
+    n_gen = len(eng.generated[0])
+    assert eng.step() is None  # full slot parked; nothing left to decode
+    assert not eng.active[0] and eng.overflowed[0] and eng.lens[0] == 8
+    assert len(eng.generated[0]) == n_gen  # no token appended past capacity
+    for old, new in zip(before, jax.tree.leaves(eng.cache)):
+        np.testing.assert_array_equal(old, np.asarray(new))  # KV untouched
+    # the parked slot is reusable: a fresh request resets the flags
+    eng.add_request(0, jnp.asarray([3, 1], jnp.int32))
+    assert eng.active[0] and not eng.overflowed[0] and eng.lens[0] == 1
+
+
+def test_capacity_parking_leaves_other_slots_running():
+    cfg, params, eng = _engine(slots=2, max_len=8)
+    eng.add_request(0, jax.random.randint(jax.random.PRNGKey(8), (7,), 0,
+                                          cfg.vocab))
+    eng.add_request(1, jax.random.randint(jax.random.PRNGKey(9), (2,), 0,
+                                          cfg.vocab))
+    for _ in range(5):
+        eng.step()
+    assert not eng.active[0] and eng.overflowed[0]  # slot 0 hit capacity
+    assert eng.active[1] and not eng.overflowed[1]  # slot 1 keeps decoding
+    assert eng.lens[1] == 6
+
+
+def test_overlong_prompt_rejected():
+    cfg, params, eng = _engine(slots=1, max_len=8)
+    with pytest.raises(ValueError, match="exceeds the cache capacity"):
+        eng.add_request(0, jnp.zeros((9,), jnp.int32))
+    assert not eng.active[0]  # rejected before touching the slot
 
 
 def test_last_prompt_token_kv_written_once():
