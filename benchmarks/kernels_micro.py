@@ -50,4 +50,29 @@ def run():
                     t_k * 1e6,
                     f"codebook_hbm_passes/iter={tiles} (vs {N} at batch-1) "
                     f"ref_us={t_r*1e6:.0f}"))
+    # mask-aware fused sweep: the validity mask rides in VMEM with X[f], so
+    # budget-masked serving keeps the single codebook pass per (f, row-tile)
+    # (vs 2*tiles for the two-pass masked sweep the old guard fell back to)
+    mask = jnp.stack([jnp.arange(M) < m for m in (5, M, 9)])
+    t_m = timeit(lambda a, b: rsk.resonator_step_batch_masked(
+        a, b, cbs, mask, interpret=True), qs, est, warmup=1, iters=3)
+    t_mr = timeit(jax.jit(lambda a, b: rsr.resonator_step_batch_masked_ref(
+        a, b, cbs, mask)), qs, est, warmup=1, iters=3)
+    rows.append(row("kernels",
+                    f"resonator_step_batch_masked(n={N},f={F},m={M},d={D})",
+                    t_m * 1e6,
+                    f"codebook_hbm_passes/iter={tiles} (vs {2*tiles} unfused "
+                    f"masked) mask_bytes/f={M*4} ref_us={t_mr*1e6:.0f}"))
+    # shard-aware fused sweep: one model shard's row block; emits raw local
+    # scores + the partial projection for the packed one-psum-per-factor
+    # gather (psum payload 4*(M+D) B/row/factor, same as the unfused path)
+    M2 = M // 2
+    t_l = timeit(lambda a, b: rsk.resonator_step_batch_local(
+        a, b, cbs[:, :M2], mask[:, :M2], interpret=True), qs, est,
+        warmup=1, iters=3)
+    rows.append(row("kernels",
+                    f"resonator_step_batch_local(n={N},f={F},m={M2},d={D})",
+                    t_l * 1e6,
+                    f"local_codebook_hbm_passes/iter={tiles} "
+                    f"psum_payload_B/row/f={4*(M+D)}"))
     return rows

@@ -155,7 +155,8 @@ def sa_circconv_as_gemv_cycles(hw: ArrayConfig, k: int, d: int,
 
 
 def sa_gemm_cycles(hw: ArrayConfig, m: int, k: int, n: int,
-                   cells: int | None = None, itemsize: int = 1) -> dict:
+                   cells: int | None = None, itemsize: int = 1,
+                   weight_resident: bool = False) -> dict:
     """Weight-stationary GEMM of [m,k]x[k,n] on `cells` cooperating cells.
 
     Cells split the M dimension (rows — the standard data-parallel mapping);
@@ -163,6 +164,11 @@ def sa_gemm_cycles(hw: ArrayConfig, m: int, k: int, n: int,
     which is how small kernels under-utilise a monolithic 128x128 array while
     saturating 32x32 cells (the paper's 91% vs ~10x utilization argument,
     Sec. V-E).  Fill/drain overhead: 2P per weight tile.
+
+    ``weight_resident``: the [k, n] operand is already on-chip (a fused
+    producer kept it resident — e.g. the fused resonator sweep's projection
+    re-using the similarity matmul's codebook), so it is dropped from the
+    DRAM traffic; compute cycles are unchanged.
     """
     P = hw.cell_dim
     cells = cells if cells is not None else hw.num_cells
@@ -173,7 +179,7 @@ def sa_gemm_cycles(hw: ArrayConfig, m: int, k: int, n: int,
     # tile ROW is exposed
     overhead = math.ceil(k / P) * 2 * P
     compute_cycles = compute + overhead
-    bytes_moved = (m * k + k * n + m * n) * itemsize
+    bytes_moved = (m * k + (0 if weight_resident else k * n) + m * n) * itemsize
     mem_cycles = bytes_moved / hw.dram_bw_bytes * hw.freq_hz
     return {"cycles": max(compute_cycles, mem_cycles),
             "compute_cycles": compute_cycles, "mem_cycles": mem_cycles,

@@ -60,6 +60,9 @@ class FactorizerConfig:
     fused_step: bool = False  # bipolar+synchronous only: run the whole sweep in
     # the fused Pallas kernel (kernels/resonator_step) — halves codebook HBM
     # traffic per iteration; requires noise_std == 0 and a dense codebook.
+    # Validity masks ride into the kernel (mask-aware variant) and model
+    # sharding uses the shard-aware variant, so neither disqualifies —
+    # see fused_sweep_eligible().
 
     def __post_init__(self):
         if self.algebra == "bipolar" and self.vsa.lanes != 1:
@@ -154,8 +157,24 @@ class _State(NamedTuple):
     it: jax.Array  # [] global sweep counter
 
 
+def fused_sweep_eligible(cfg: FactorizerConfig) -> bool:
+    """Can this config's sweep run the fused Pallas kernel?
+
+    Bipolar Jacobi (synchronous) sweeps with elementwise activations, no
+    stochasticity, and dense fp32 codebooks.  Validity masks and model
+    sharding are served by the mask-aware / shard-aware kernel variants
+    (:mod:`repro.kernels.resonator_step`), so — unlike the original guard —
+    they do NOT disqualify; quantized codebooks still do (the int8 path has
+    its own kernel).
+    """
+    return (cfg.fused_step and cfg.algebra == "bipolar" and cfg.synchronous
+            and cfg.noise_std == 0 and cfg.proj_noise_std == 0
+            and cfg.activation in ("identity", "abs")
+            and cfg.codebook_fmt == "fp32")
+
+
 def sweep_cost_ops(cfg: FactorizerConfig, n: int, *, data_shards: int = 1,
-                   model_shards: int = 1) -> list:
+                   model_shards: int = 1, fused: bool | None = None) -> list:
     """Scheduler cost hints for ONE resonator sweep over `n` queries.
 
     unbind -> codebook scores -> projection -> convergence check, sized per
@@ -170,8 +189,16 @@ def sweep_cost_ops(cfg: FactorizerConfig, n: int, *, data_shards: int = 1,
     reduce per factor, then the convergence atom gather — see
     :func:`make_resonator`) appear as ``collective`` ops, so an adSCH plan
     prices the wire time instead of assuming communication is free.
+
+    ``fused`` (default: :func:`fused_sweep_eligible`) prices the fused
+    Pallas sweep: the projection re-reads the codebook from VMEM, not HBM,
+    so its gemm is marked ``weight_resident`` — the codebook HBM term of a
+    sweep halves, and adSCH's lag/burst and ``choose_slots`` verdicts see
+    the fused path's real memory traffic.
     """
     from repro.core.scheduler import Op
+    if fused is None:
+        fused = fused_sweep_eligible(cfg)
     F, M, D = cfg.num_factors, cfg.codebook_size, cfg.vsa.dim
     n_loc = -(-n // data_shards)
     m_loc = -(-M // model_shards)
@@ -184,7 +211,7 @@ def sweep_cost_ops(cfg: FactorizerConfig, n: int, *, data_shards: int = 1,
     ops.append(Op("scores", "gemm", (n_loc * F, D, m_loc), deps=("unbind",),
                   symbolic=True))
     ops.append(Op("project", "gemm", (n_loc * F, m_loc, D), deps=("scores",),
-                  symbolic=True))
+                  symbolic=True, weight_resident=fused))
     conv_dep = "project"
     if model_shards > 1:
         ops.append(Op("psum_scores", "collective",
@@ -238,7 +265,8 @@ def make_resonator(codebooks, cfg: FactorizerConfig,
                    valid_mask: jax.Array | None = None, *,
                    model_axis: str | None = None,
                    full_rows: int | None = None,
-                   init_est: jax.Array | None = None) -> Resonator:
+                   init_est: jax.Array | None = None,
+                   fused=None) -> Resonator:
     """Build the sweep machinery for one codebook set (see :class:`Resonator`).
 
     A query row freezes once it converges (``done``) or exhausts its
@@ -261,6 +289,14 @@ def make_resonator(codebooks, cfg: FactorizerConfig,
     Convergence gathers the F decoded atom rows with one more one-hot psum.
     Queries/state shard freely over a `data` axis with no extra machinery —
     every other op is row-local.
+
+    ``fused`` is an optional :class:`repro.kernels.resonator_step.ops
+    .FusedConfig` (row-tile / interpret knobs) for configs where
+    :func:`fused_sweep_eligible` holds: masked batches run the mask-aware
+    kernel, and the model-sharded mode runs the shard-aware kernel — the
+    local matmuls fuse while the sweep keeps its one-packed-psum-per-factor
+    contract (the projection psum is the same reassociated fp sum as the
+    unfused path: integer-exact for bipolar codebooks).
     """
     vcfg = cfg.vsa
     if model_axis is not None:
@@ -386,14 +422,11 @@ def make_resonator(codebooks, cfg: FactorizerConfig,
     def reconstruct(idx: jax.Array) -> jax.Array:
         return vsa.bind_all(hard_atoms(idx), vcfg, axis=-2)
 
-    use_fused = (cfg.fused_step and cfg.algebra == "bipolar" and cfg.synchronous
-                 and cfg.noise_std == 0 and cfg.proj_noise_std == 0
-                 and not isinstance(codebooks, QTensor)
-                 and cfg.activation in ("identity", "abs")
-                 and model_axis is None  # kernel sees one device's rows only
-                 # the fused kernel's projection cannot see valid_mask, so a
-                 # padded codebook would leak invalid atoms into the estimates
-                 and no_mask)
+    # Masking and model sharding no longer disqualify: the mask-aware kernel
+    # carries valid_mask into VMEM, and the shard-aware kernel emits the
+    # (padded local scores, partial projection) halves of the packed psum.
+    use_fused = (fused_sweep_eligible(cfg)
+                 and not isinstance(codebooks, QTensor))
 
     def active(s: _State) -> jax.Array:
         return jnp.logical_and(~s.done, s.iters < cfg.max_iters)
@@ -405,9 +438,39 @@ def make_resonator(codebooks, cfg: FactorizerConfig,
         if use_fused:  # fused Pallas sweep: one codebook pass per (f, row-tile)
             from repro.kernels.resonator_step import ops as rs
 
-            # use_fused implies no_mask, so alpha needs no validity masking
-            alpha, est = rs.fused_resonator_step_batch(
-                qs, est, dense_cb, activation=cfg.activation)
+            if model_axis is not None:
+                # Shard-aware fused path: local matmuls run in the kernel,
+                # then the SAME one-packed-psum-per-factor gather as the
+                # unfused model-sharded sweep — padded scores are bit-exact
+                # (disjoint supports), the projection reduce reassociates the
+                # fp sum exactly like the unfused path (integer-exact for
+                # bipolar codebooks with elementwise activations).
+                off = _row_offset()
+                mask_loc = jax.lax.dynamic_slice_in_dim(valid_mask, off,
+                                                        M_loc, axis=1)
+                alpha_loc, part = rs.fused_resonator_step_batch_local(
+                    qs, est, dense_cb, mask_loc, activation=cfg.activation,
+                    fused=fused)
+                pad = jnp.zeros(alpha_loc.shape[:1] + (M,), alpha_loc.dtype)
+                alphas, ests = [], []
+                for i in range(F):
+                    padded = jax.lax.dynamic_update_slice_in_dim(
+                        pad, alpha_loc[:, i], off, axis=-1)
+                    packed = jax.lax.psum(
+                        jnp.concatenate([padded, part[:, i]], axis=-1),
+                        model_axis)
+                    alphas.append(jnp.where(valid_mask[i],
+                                            packed[..., :M], neg))
+                    ests.append(_norm(packed[..., M:], cfg))
+                alpha = jnp.stack(alphas, axis=1)
+                est = jnp.stack(ests, axis=1)
+            elif no_mask:  # dense fast path: alpha needs no validity masking
+                alpha, est = rs.fused_resonator_step_batch(
+                    qs, est, dense_cb, activation=cfg.activation, fused=fused)
+            else:  # mask-aware kernel: scores neutralised / weights zeroed
+                alpha, est = rs.fused_resonator_step_batch_masked(
+                    qs, est, dense_cb, valid_mask, activation=cfg.activation,
+                    fused=fused)
         elif cfg.synchronous:  # Jacobi: all factors from the same snapshot
             snapshot = est
             outs = [factor_update(qs, i, snapshot,

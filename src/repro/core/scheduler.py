@@ -41,6 +41,11 @@ class Op:
     symbolic: bool = False
     collective: str = "psum"  # kind=="collective" only: psum | all_gather |
     # reduce_scatter | ppermute (the jax.lax primitive being priced)
+    # gemm/conv2d only: the [k, n] stationary operand is already resident in
+    # on-chip memory (a fused kernel kept it from a producer op), so it costs
+    # no HBM traffic here — how the fused resonator sweep's projection halves
+    # the codebook HBM term (kernels/resonator_step).
+    weight_resident: bool = False
 
     def flops(self) -> float:
         if self.kind in ("gemm", "conv2d"):
@@ -56,7 +61,8 @@ class Op:
     def bytes_moved(self, itemsize: int = 1) -> float:
         if self.kind in ("gemm", "conv2d"):
             m, k, n = self.dims
-            return float(m * k + k * n + m * n) * itemsize
+            weight = 0 if self.weight_resident else k * n
+            return float(m * k + weight + m * n) * itemsize
         if self.kind == "circconv":
             kc, d = self.dims
             return 3.0 * kc * d * itemsize
@@ -77,7 +83,9 @@ def op_cycles(op: Op, hw: hw_model.ArrayConfig, n_cells: int) -> float:
     """Analytic runtime of `op` on `n_cells` cooperating cells."""
     if op.kind in ("gemm", "conv2d"):
         m, k, n = op.dims
-        return hw_model.sa_gemm_cycles(hw, m, k, n, cells=n_cells)["cycles"]
+        return hw_model.sa_gemm_cycles(
+            hw, m, k, n, cells=n_cells,
+            weight_resident=op.weight_resident)["cycles"]
     if op.kind == "circconv":
         kc, d = op.dims
         if hw.reconfigurable:

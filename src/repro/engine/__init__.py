@@ -41,12 +41,14 @@ from repro.engine.engine import (Engine, Request, derive_sweeps_per_step,
 from repro.engine.registry import ServeSpec
 from repro.engine.sharding import ShardedEngine, choose_slots
 from repro.engine.stage import Stage, StageGraph, graph_ops, stage_ops
+from repro.kernels.resonator_step.ops import FusedConfig
 
 from repro.engine import pipelines as _builtin  # noqa: F401  (registers built-ins)
 
 __all__ = [
-    "Engine", "Request", "ServeSpec", "ShardedEngine", "Stage", "StageGraph",
-    "PipelinePlan", "PipelineRunner", "build_pipeline", "choose_slots",
-    "plan_interleave", "derive_sweeps_per_step", "step_unit_ops",
-    "sweep_cost_ops", "graph_ops", "stage_ops", "registry", "sharding",
+    "Engine", "FusedConfig", "Request", "ServeSpec", "ShardedEngine", "Stage",
+    "StageGraph", "PipelinePlan", "PipelineRunner", "build_pipeline",
+    "choose_slots", "plan_interleave", "derive_sweeps_per_step",
+    "step_unit_ops", "sweep_cost_ops", "graph_ops", "stage_ops", "registry",
+    "sharding",
 ]

@@ -48,7 +48,8 @@ def _makespan(ops, hw, interleave: bool) -> float:
 
 def plan_interleave(graph: StageGraph, hw=hw_model.COGSYS, *,
                     min_gain: float = 1.05,
-                    shards: tuple | None = None) -> PipelinePlan:
+                    shards: tuple | None = None,
+                    fused: bool | None = None) -> PipelinePlan:
     """Decide, per stage boundary, whether a one-batch lag pays off.
 
     Boundary i separates stages[:i+1] from stages[i+1:].  With lag 1, one
@@ -64,7 +65,19 @@ def plan_interleave(graph: StageGraph, hw=hw_model.COGSYS, *,
     (:func:`repro.engine.sharding.costs.shard_graph`) — communication is no
     longer free, so a boundary whose symbolic tail only hid inside the
     neural window because it ignored gather time can lose its lag.
+
+    ``fused`` force-prices the fused resonator sweep on a graph whose
+    symbolic hints were declared without it (True: projection legs become
+    ``weight_resident`` and, sharded, score->project pairs gather with one
+    packed psum; False: restore two-pass pricing).  ``None`` keeps whatever
+    the hints already carry — specs built from a fused-eligible
+    ``FactorizerConfig`` arrive pre-marked via
+    :func:`repro.core.factorizer.sweep_cost_ops`.
     """
+    if fused is not None:
+        from repro.engine.sharding.costs import mark_fused
+
+        graph = mark_fused(graph, fused)
     if shards is not None:
         from repro.engine.sharding.costs import shard_graph
 

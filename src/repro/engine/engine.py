@@ -138,10 +138,22 @@ class Engine:
 
     def __init__(self, spec: ServeSpec, *, slots: int = 32,
                  sweeps_per_step: int | None = None, hw=hw_model.COGSYS,
-                 key: jax.Array | None = None):
+                 key: jax.Array | None = None, fused=None):
         self.spec = spec
         self.slots = slots
         self.hw = hw
+        # Kernel knobs for fused-eligible specs (cfg.fused_step &c. — see
+        # factorizer.fused_sweep_eligible): a
+        # repro.kernels.resonator_step.ops.FusedConfig or None (defaults).
+        # Threaded into every make_resonator build, including post-resize
+        # rebuilds and ShardedEngine's shard_map bodies.
+        from repro.kernels.resonator_step.ops import FusedConfig
+        if fused is not None and not isinstance(fused, FusedConfig):
+            raise TypeError(
+                f"Engine(fused=) expects a FusedConfig or None, got "
+                f"{fused!r}; the fused sweep is requested via "
+                "fused_step=True on the spec's FactorizerConfig")
+        self.fused = fused
         self._sweeps_pinned = sweeps_per_step is not None
         self.sweeps_per_step = (self._derive_sweeps_per_step()
                                 if sweeps_per_step is None else sweeps_per_step)
@@ -172,7 +184,8 @@ class Engine:
         """Compile the three device programs (sweep burst / refill / decode)
         and allocate the parked slot state."""
         spec, slots = self.spec, self.slots
-        rs = fz.make_resonator(spec.codebooks, spec.cfg, spec.valid_mask)
+        rs = fz.make_resonator(spec.codebooks, spec.cfg, spec.valid_mask,
+                               fused=self.fused)
         self._rs = rs
         self.qs = jnp.zeros((slots, spec.dim), jnp.float32)
         st = rs.init(self.qs, jax.random.split(jax.random.PRNGKey(0), slots))

@@ -31,7 +31,8 @@ from repro.models import nvsa as nvsa_mod
 
 @register("nvsa_abduction")
 def nvsa_abduction(key, *, cfg=None, params=None, batch: int = 8,
-                   expected_sweeps: int | None = None) -> ServeSpec:
+                   expected_sweeps: int | None = None,
+                   fused_step: bool = False) -> ServeSpec:
     """NVSA RPM abduction.
 
     Engine requests: the 8 context-panel queries of one task ([8, D]), with
@@ -39,8 +40,20 @@ def nvsa_abduction(key, *, cfg=None, params=None, batch: int = 8,
     same beliefs -> abduce -> execute -> rank tail as :func:`nvsa.solve`.
     With ``params`` (a trained CNN) the ServeSpec also carries the runnable
     two-stage graph for stream serving.
+
+    ``fused_step=True`` requests the fused Pallas sweep.  It only engages
+    where :func:`repro.core.factorizer.fused_sweep_eligible` holds — the
+    default NVSA config is unitary/Gauss-Seidel/stochastic, so there the
+    flag is a documented no-op (the engine keeps the two-pass sweep and
+    trajectories are unchanged); bipolar NVSA variants (``vsa.lanes == 1``)
+    fuse for real.
     """
+    import dataclasses as _dc
+
     cfg = cfg if cfg is not None else nvsa_mod.NVSAConfig()
+    if fused_step and not cfg.factorizer.fused_step:
+        cfg = _dc.replace(cfg, factorizer=_dc.replace(
+            cfg.factorizer, fused_step=True))
     cbs, mask = nvsa_mod.make_codebooks(key, cfg)
     graph = nvsa_mod.stage_graph(params, cbs, mask, cfg, batch=batch,
                                  expected_sweeps=expected_sweeps)
@@ -65,19 +78,27 @@ def nvsa_abduction(key, *, cfg=None, params=None, batch: int = 8,
 def lvrf_rows(key, *, cfg=None, rules=("constant", "progression_p1",
                                        "distribute_three"),
               examples: int = 32, max_iters: int = 40,
-              batch: int = 32) -> ServeSpec:
+              batch: int = 32, synchronous: bool = False,
+              fused_step: bool = False) -> ServeSpec:
     """LVRF: decode row encodings and serve rule abduction/execution.
 
     Engine requests: row vectors [k, D] (products of permuted value atoms);
     results decode back to the (v1, v2, v3) values.  The stream graph
     encodes observed rows then scores them against the one-shot-learned rule
     codebook and executes the abduced rule over candidate completions.
+
+    ``fused_step=True`` (with ``synchronous=True`` — Jacobi sweeps, which
+    the fused kernel requires) serves the rows through the fused Pallas
+    sweep: bit-identical trajectories to the unfused Jacobi path at half
+    the per-iteration codebook HBM traffic.
     """
     cfg = cfg if cfg is not None else lvrf_mod.LVRFConfig()
     k_atoms, _ = jax.random.split(jnp.asarray(key))
     atoms = lvrf_mod.init_atoms(k_atoms, cfg)
     cbs = lvrf_mod.row_codebooks(atoms, cfg)
-    fcfg = lvrf_mod.row_factorizer_config(cfg, max_iters=max_iters)
+    fcfg = lvrf_mod.row_factorizer_config(
+        cfg, max_iters=max_iters, synchronous=synchronous or fused_step,
+        fused_step=fused_step)
     rows = lvrf_mod.make_rule_examples(np.random.default_rng(0), list(rules),
                                        cfg.n_values, examples)
     rule_vecs = lvrf_mod.learn_rules(atoms, jnp.asarray(rows), cfg)

@@ -31,11 +31,25 @@ DEFAULT_CANDIDATES = (4, 8, 16, 32, 64, 128, 256)
 
 def modeled_sweep_seconds(cfg: fz.FactorizerConfig, slots_per_shard: int,
                           hw=hw_model.COGSYS, *, data_shards: int = 1,
-                          model_shards: int = 1) -> float:
-    """adSCH makespan of ONE per-device sweep (collectives included), in s."""
+                          model_shards: int = 1,
+                          fused: bool | None = None) -> float:
+    """adSCH makespan of ONE per-device sweep (collectives included).
+
+    UNITS: **modeled device-seconds** on the paper's cell pool (makespan
+    cycles / ``hw.freq_hz``) — NOT wall-clock seconds of the machine that is
+    actually serving.  A service rate built on this is only comparable to
+    other modeled rates (relative slot-count decisions); mixing it with a
+    wall-clock arrival rate (the runtime's EWMA) compares incompatible
+    units — use a measured sweep cost for that (see :func:`choose_slots`
+    ``measured_sweep_s`` and :func:`retune_slots` ``measured_step_unit_s``).
+
+    ``fused`` defaults to the config's own fused-sweep eligibility
+    (:func:`repro.core.factorizer.fused_sweep_eligible`), so a fused spec's
+    halved codebook HBM term prices into the verdicts automatically.
+    """
     ops = fz.sweep_cost_ops(cfg, slots_per_shard * data_shards,
                             data_shards=data_shards,
-                            model_shards=model_shards)
+                            model_shards=model_shards, fused=fused)
     return sch.schedule(ops, hw).makespan / hw.freq_hz
 
 
@@ -62,7 +76,14 @@ def service_rate_rps(spec, slots_per_shard: int, *, data_shards: int = 1,
                      model_shards: int = 1, hw=hw_model.COGSYS,
                      mean_iters: float | None = None,
                      measured_sweep_s=None) -> float:
-    """Steady-state requests/s the engine retires at this slot count."""
+    """Steady-state requests/s the engine retires at this slot count.
+
+    UNITS: with ``measured_sweep_s`` the result is wall-clock requests/s —
+    directly comparable to an EWMA arrival rate.  Without it the sweep cost
+    is :func:`modeled_sweep_seconds` (**modeled device-seconds**), so the
+    "rate" is a model-relative quantity: fine for comparing candidates
+    against each other, NOT against a wall-clock ``arrival_rps``.
+    """
     if measured_sweep_s is not None:
         t = measured_sweep_s(slots_per_shard) if callable(measured_sweep_s) \
             else float(measured_sweep_s)
@@ -90,7 +111,11 @@ def choose_slots(spec, *, arrival_rps: float | None = None,
 
     ``measured_sweep_s`` (a seconds value or a ``f(slots_per_shard)``
     callable, e.g. :func:`measure_sweep_seconds`) replaces the analytic
-    sweep cost with a measured one.
+    sweep cost with a measured one.  UNITS: only with a measured cost are
+    the candidate service rates wall-clock and hence commensurable with a
+    wall-clock ``arrival_rps``; the analytic basis is modeled
+    device-seconds — see :func:`modeled_sweep_seconds` — and should be
+    reserved for offline sizing where both sides come from the model.
     """
     cands = sorted(set(int(c) for c in candidates))
     if not cands:
@@ -113,7 +138,8 @@ def choose_slots(spec, *, arrival_rps: float | None = None,
 
 def retune_slots(engine, arrival_rps: float, *,
                  candidates=DEFAULT_CANDIDATES, mean_iters: float | None = None,
-                 headroom: float = 1.25, measured_sweep_s=None) -> int | None:
+                 headroom: float = 1.25, measured_sweep_s=None,
+                 measured_step_unit_s: float | None = None) -> int | None:
     """Online re-tune entry point: re-run :func:`choose_slots` against a live
     engine's current shape and a FRESH arrival-rate estimate (the runtime's
     EWMA over submit timestamps).
@@ -124,10 +150,25 @@ def retune_slots(engine, arrival_rps: float, *,
     to 1) and ``ShardedEngine`` (slots-per-shard re-chosen, scaled back up
     by the data axis so divisibility is preserved by construction).
 
-    ``measured_sweep_s`` replaces the analytic sweep cost exactly as in
-    :func:`choose_slots`; pass ``True`` to time the spec's actual compiled
-    sweep per candidate (:func:`measure_sweep_seconds`) — the honest cost
-    basis when re-tuning on the machine that is serving.
+    UNITS — the pitfall this signature exists to avoid: ``arrival_rps`` is
+    WALL-CLOCK (EWMA over submit timestamps), but the default analytic sweep
+    cost is **modeled device-seconds** on the paper's cell pool
+    (:func:`modeled_sweep_seconds`), typically orders of magnitude below the
+    wall cost of the machine actually serving — an analytic re-tune then
+    concludes the smallest candidate always keeps up and never moves slots.
+    Prefer a measured cost basis whenever one exists:
+
+    * ``measured_step_unit_s`` — wall seconds of ONE step unit (sweep) at
+      the engine's CURRENT slots-per-shard, e.g. the runtime's step-time
+      EWMA (:class:`repro.runtime.telemetry.EngineTelemetry`).  Candidate
+      costs are this measurement scaled by the analytic model's
+      *dimensionless ratio* ``modeled(n) / modeled(current)`` — wall-clock
+      units, no extra measurement stalls.
+    * ``measured_sweep_s`` — replaces the sweep cost exactly as in
+      :func:`choose_slots`; pass ``True`` to time the spec's actual
+      compiled sweep per candidate (:func:`measure_sweep_seconds`) — the
+      honest (but stalling) basis when re-tuning on the serving machine.
+      Takes precedence over ``measured_step_unit_s``.
     """
     if engine.spec.cfg is None:
         return None  # not a factorizer engine; nothing for choose_slots to price
@@ -137,6 +178,17 @@ def retune_slots(engine, arrival_rps: float, *,
     if measured_sweep_s is True:
         spec = engine.spec
         measured_sweep_s = lambda n: measure_sweep_seconds(spec, n)
+    elif measured_sweep_s is None and measured_step_unit_s is not None:
+        cfg, hw = engine.spec.cfg, engine.hw
+        cur = max(1, engine.slots // data)
+        base = modeled_sweep_seconds(cfg, cur, hw, data_shards=data,
+                                     model_shards=model)
+
+        def measured_sweep_s(n, _t0=float(measured_step_unit_s), _base=base):
+            scale = (modeled_sweep_seconds(cfg, n, hw, data_shards=data,
+                                           model_shards=model) / _base
+                     if _base > 0 else n / cur)
+            return _t0 * scale
     per_shard = choose_slots(engine.spec, arrival_rps=arrival_rps,
                              data_shards=data, model_shards=model,
                              hw=engine.hw, candidates=candidates,

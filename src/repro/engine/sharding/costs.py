@@ -18,6 +18,17 @@ The factorizer's own sweep collectives are modeled exactly by
 :func:`repro.core.factorizer.sweep_cost_ops` (``model_shards=``); the
 stage-level rule here is the generic first-order version for registered
 graphs that only declare GEMM/conv/simd hints.
+
+**Fused pricing.**  A gemm marked ``weight_resident`` (the projection leg of
+a fused score->project pair — see ``Op.weight_resident``) consumes its
+producer's stationary operand from on-chip memory: :func:`shard_ops`
+preserves the marker (the HBM discount already lives in ``Op.bytes_moved``),
+and :func:`shard_graph` folds the pair's two gathers into ONE packed psum
+carrying both outputs — the collective contract the fused sharded resonator
+sweep actually keeps (one psum per factor, scores + partial projection
+together).  :func:`mark_fused` force-toggles the marker on a graph whose
+hints were declared without it, so a planner can ask "would serving this
+graph fused change the lag verdict?" without rebuilding the spec.
 """
 from __future__ import annotations
 
@@ -25,6 +36,27 @@ import dataclasses
 
 from repro.core.scheduler import Op
 from repro.engine.stage import StageGraph
+
+
+def mark_fused(graph: StageGraph, fused: bool = True) -> StageGraph:
+    """Set/clear ``weight_resident`` on the projection legs of a graph.
+
+    A symbolic gemm that directly consumes another gemm's output in the same
+    stage re-reads that producer's stationary operand (score -> project in a
+    resonator sweep); ``fused=True`` prices it as VMEM-resident,
+    ``fused=False`` restores the two-pass HBM pricing.
+    """
+    new_stages = []
+    for st in graph.stages:
+        gemms = {op.name for op in st.cost_ops if op.kind == "gemm"}
+        ops = tuple(
+            dataclasses.replace(
+                op, weight_resident=(fused and op.kind == "gemm"
+                                     and op.symbolic
+                                     and any(d in gemms for d in op.deps)))
+            for op in st.cost_ops)
+        new_stages.append(dataclasses.replace(st, cost_ops=ops))
+    return StageGraph(graph.name, tuple(new_stages))
 
 
 def _ceil_div(a: int, b: int) -> int:
@@ -67,26 +99,66 @@ def shard_graph(graph: StageGraph, data_shards: int = 1,
     ops whose operands a row-shard splits) is followed by a ``psum``
     collective carrying its fp32 output, and downstream deps are rewired
     through the psum so the scheduler cannot start dependents before the
-    gather lands.  Neural stages are data-parallel (their tensor-parallel
-    comms are out of scope for the cell-pool model) and gain no collectives.
+    gather lands.  A ``weight_resident`` gemm consuming another gemm is a
+    fused pair: the producer's psum is deferred and the pair issues ONE
+    packed collective carrying both outputs (the fused sharded sweep's
+    one-psum-per-factor contract).  Neural stages are data-parallel (their
+    tensor-parallel comms are out of scope for the cell-pool model) and gain
+    no collectives.
     """
     new_stages = []
     for st in graph.stages:
         ops = shard_ops(list(st.cost_ops), data_shards, model_shards)
         if model_shards > 1 and st.symbolic:
-            rewired, renames = [], {}
+            gemms = {op.name: op for op in ops if op.kind == "gemm"}
+            cand = {}  # producer gemm -> the fused consumer's name
             for op in ops:
-                op = dataclasses.replace(
-                    op, deps=tuple(renames.get(d, d) for d in op.deps))
+                if op.kind == "gemm" and op.weight_resident:
+                    prods = [d for d in op.deps if d in gemms]
+                    if prods:  # one packed partner; extra gemm deps keep
+                        cand[prods[0]] = op.name  # their own psums
+            # A producer may only defer its gather into a consumer that
+            # itself emits a psum.  In a weight-resident CHAIN (g1->g2->g3
+            # all marked) the middle gemm's psum is deferred, so pairs whose
+            # consumer is also a deferred producer are dropped — those
+            # producers keep their own psums.  Conservative (an extra
+            # collective vs a hypothetical 3-op fused kernel) but never
+            # silently drops a gather from the priced plan.
+            producers = set(cand)
+            packed_into = {p: c for p, c in cand.items()
+                           if c not in producers}
+            producer_of = {c: p for p, c in packed_into.items()}
+            # Pass 1: append psums with payloads from the pre-scan, so a
+            # fused pair's packed collective carries BOTH outputs no matter
+            # how the declared tuple orders producer and consumer.
+            rewired, renames, new_psums, raw_edge = [], {}, set(), {}
+            for op in ops:
                 rewired.append(op)
-                if op.kind == "gemm":
-                    m, _, n = op.dims
-                    ps = Op(op.name + "_psum", "collective",
-                            (4.0 * m * n, model_shards), deps=(op.name,),
-                            symbolic=True, collective="psum")
-                    rewired.append(ps)
-                    renames[op.name] = ps.name
-            ops = rewired
+                if op.kind != "gemm" or op.name in packed_into:
+                    continue  # a packed producer's gather rides its pair
+                m, _, n = op.dims
+                payload = 4.0 * m * n
+                prod = producer_of.get(op.name)
+                if prod is not None:
+                    pm, _, pn = gemms[prod].dims
+                    payload += 4.0 * pm * pn  # the deferred producer gather
+                ps = Op(op.name + "_psum", "collective",
+                        (payload, model_shards), deps=(op.name,),
+                        symbolic=True, collective="psum")
+                rewired.append(ps)
+                new_psums.add(ps.name)
+                renames[op.name] = ps.name
+                if prod is not None:
+                    # third-party consumers of the producer must wait for
+                    # the packed gather; the pair's own edge stays raw (the
+                    # local partial products feed the local projection)
+                    renames[prod] = ps.name
+                    raw_edge[op.name] = prod
+            # Pass 2: rewire every dep through the gathers (order-free).
+            ops = [op if op.name in new_psums else dataclasses.replace(
+                op, deps=tuple(d if d == raw_edge.get(op.name)
+                               else renames.get(d, d) for d in op.deps))
+                for op in rewired]
         new_stages.append(dataclasses.replace(st, cost_ops=tuple(ops)))
     return StageGraph(f"{graph.name}@{data_shards}x{model_shards}",
                       tuple(new_stages))

@@ -47,7 +47,7 @@ class ShardedEngine(Engine):
                  codebook_placement: str = "replicated",
                  slots: int | None = None, arrival_rps: float | None = None,
                  sweeps_per_step: int | None = None, hw=hw_model.COGSYS,
-                 key: jax.Array | None = None):
+                 key: jax.Array | None = None, fused=None):
         self.mesh = mesh if mesh is not None else launch_mesh.make_host_mesh()
         for ax in ("data", "model"):
             if ax not in self.mesh.shape:
@@ -75,7 +75,7 @@ class ShardedEngine(Engine):
             raise ValueError(f"the data axis size ({self.data_shards}) must "
                              f"divide slots ({slots})")
         super().__init__(spec, slots=slots, sweeps_per_step=sweeps_per_step,
-                         hw=hw, key=key)
+                         hw=hw, key=key, fused=fused)
 
     # -- seams over the base engine ---------------------------------------
 
@@ -91,20 +91,23 @@ class ShardedEngine(Engine):
         rows = self._rows
 
         cb = spec.codebooks
+        fused = self.fused
         if rows:
             M = cb.shape[1]
             init_est = fz.superposition_init(cb, cfg, mask)
             cb_spec = P(None, "model", None)  # [F, M, D] rows over `model`
 
             def make_rs(cb_arg):
+                # fused-eligible cfgs run the shard-aware fused kernel here:
+                # local matmuls fused, still one packed psum per factor
                 return fz.make_resonator(cb_arg, cfg, mask,
                                          model_axis="model", full_rows=M,
-                                         init_est=init_est)
+                                         init_est=init_est, fused=fused)
         else:
             cb_spec = jax.tree.map(lambda _: P(), cb)  # replicated (QTensor ok)
 
             def make_rs(cb_arg):
-                return fz.make_resonator(cb_arg, cfg, mask)
+                return fz.make_resonator(cb_arg, cfg, mask, fused=fused)
 
         state_spec = fz._State(est=P("data"), iters=P("data"), done=P("data"),
                                sim=P("data"), keys=P("data"), it=P())

@@ -5,10 +5,19 @@ One factorizer iteration for factor f (paper Fig. 8 steps 1-3, MAP algebra):
     alpha  = X[f] @ u                              (similarity)
     w      = act(alpha)                            (identity | abs)
     est'_f = sign(w @ X[f])                        (projection + saturation)
+
+The masked oracle adds the codebook-validity contract the serving engines
+need (padded attribute books, budget-masked rows): invalid rows score
+``-1e9`` (never win the argmax) and contribute zero weight to the
+projection.  The local oracle is the per-model-shard half of the same sweep:
+raw local scores + the *partial* un-saturated projection, to be gathered
+with one psum per factor and saturated by the caller.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
+
+_NEG = -1e9
 
 
 def resonator_step_batch_ref(qs, est, codebooks, activation: str = "identity"):
@@ -24,6 +33,41 @@ def resonator_step_batch_ref(qs, est, codebooks, activation: str = "identity"):
     proj = jnp.einsum("nfm,fmd->nfd", w, codebooks)
     new_est = jnp.where(proj >= 0, 1.0, -1.0).astype(est.dtype)
     return alpha, new_est
+
+
+def resonator_step_batch_masked_ref(qs, est, codebooks, valid_mask,
+                                    activation: str = "identity"):
+    """Mask-aware oracle.  valid_mask: [F, M] bool -> (alpha [N, F, M] with
+    invalid rows at -1e9, new_est [N, F, D]) — the exact score-neutralise /
+    weight-zero sequence of the unfused masked path."""
+    prod = jnp.prod(est, axis=1)
+    u = qs[:, None] * prod[:, None] * est
+    alpha = jnp.einsum("nfd,fmd->nfm", u, codebooks)
+    alpha = jnp.where(valid_mask[None], alpha, _NEG)
+    w = jnp.abs(alpha) if activation == "abs" else alpha
+    w = w * valid_mask[None]
+    proj = jnp.einsum("nfm,fmd->nfd", w, codebooks)
+    new_est = jnp.where(proj >= 0, 1.0, -1.0).astype(est.dtype)
+    return alpha, new_est
+
+
+def resonator_step_batch_local_ref(qs, est, cb_local, valid_mask_local=None,
+                                   activation: str = "identity"):
+    """Shard-aware oracle over one model-shard's codebook rows [F, M_loc, D].
+
+    Returns (alpha_loc [N, F, M_loc] RAW, part_proj [N, F, D] fp32) — the
+    pre-psum halves; summing every shard's padded scores / partial
+    projections and sign-saturating reproduces the masked full sweep.
+    """
+    prod = jnp.prod(est, axis=1)
+    u = qs[:, None] * prod[:, None] * est
+    alpha = jnp.einsum("nfd,fmd->nfm", u, cb_local)
+    if valid_mask_local is None:
+        valid_mask_local = jnp.ones(cb_local.shape[:2], bool)
+    w = jnp.where(valid_mask_local[None], alpha, _NEG)
+    w = (jnp.abs(w) if activation == "abs" else w) * valid_mask_local[None]
+    part_proj = jnp.einsum("nfm,fmd->nfd", w, cb_local)
+    return alpha, part_proj
 
 
 def resonator_step_ref(q, est, codebooks, activation: str = "identity"):

@@ -65,12 +65,21 @@ def row_codebooks(atoms: dict, cfg: LVRFConfig) -> jax.Array:
 
 
 def row_factorizer_config(cfg: LVRFConfig, *, max_iters: int = 40,
-                          conv_threshold: float = 0.8):
-    """FactorizerConfig for :func:`row_codebooks` (MAP/bipolar, lanes == 1)."""
+                          conv_threshold: float = 0.8,
+                          synchronous: bool = False,
+                          fused_step: bool = False):
+    """FactorizerConfig for :func:`row_codebooks` (MAP/bipolar, lanes == 1).
+
+    ``synchronous=True`` switches the sweep to Jacobi (all factors from one
+    snapshot) — required by ``fused_step=True``, which then runs the whole
+    sweep in the fused Pallas kernel (halved codebook HBM traffic; see
+    :func:`repro.core.factorizer.fused_sweep_eligible`).
+    """
     from repro.core import factorizer as fz
     return fz.FactorizerConfig(
         vsa=cfg.vsa, num_factors=3, codebook_size=cfg.n_values,
-        algebra="bipolar", max_iters=max_iters, conv_threshold=conv_threshold)
+        algebra="bipolar", max_iters=max_iters, conv_threshold=conv_threshold,
+        synchronous=synchronous, fused_step=fused_step)
 
 
 def learn_rules(atoms: dict, rule_rows: jax.Array, cfg: LVRFConfig) -> jax.Array:

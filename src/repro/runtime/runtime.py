@@ -76,6 +76,9 @@ class Runtime:
         self._policies: dict = {}
         self.telemetry: dict = {}
         self._vt: dict = {}  # virtual time per engine (cost-weighted fairness)
+        # program generation (resizes_total) whose compile-bearing first busy
+        # step was already discarded from the step-cost telemetry
+        self._timed_gen: dict = {}
         self._vclock = 0.0  # service level of the last-stepped engine
         self._was_busy: set = set()
         self._steps_since_check: dict = {}
@@ -264,13 +267,28 @@ class Runtime:
 
     def _step_one(self, name: str) -> None:
         eng = self._engines[name]
+        sweeps_before = getattr(eng, "sweeps_total", None)
+        t0 = self._clock()
         finished = eng.step()
+        step_s = self._clock() - t0
         backlog = eng.in_flight + len(finished)
         self._vt[name] += step_cost_seconds(eng) / max(1, backlog)
         t = self.telemetry[name]
         slots = getattr(eng, "slots", None)
         busy = (min(1.0, backlog / slots) if slots else 0.0)
-        t.on_step(busy, eng.in_flight)
+        # Wall-clock step-cost telemetry: sweeps executed this step (0 when
+        # the engine was idle — those steps must not dilute the estimate).
+        # The FIRST busy step of each program generation (fresh engine, or a
+        # resize() rebuild) pays JIT compilation — orders of magnitude above
+        # steady state — so it is excluded from the EWMA, or the measured
+        # re-tune cost basis would be poisoned for dozens of steps.
+        units = 0 if sweeps_before is None else \
+            max(0, getattr(eng, "sweeps_total", 0) - sweeps_before)
+        gen = getattr(eng, "resizes_total", 0)
+        if units > 0 and self._timed_gen.get(name) != gen:
+            self._timed_gen[name] = gen  # compile step: warm, don't record
+            units = 0
+        t.on_step(busy, eng.in_flight, step_s=step_s, units=units)
         for req in finished:
             t.on_complete(getattr(req, "latency_s", 0.0) or 0.0)
             gid = self._gid_of.pop((name, req.id), None)
@@ -299,8 +317,15 @@ class Runtime:
             return
         if not tele.should_retune(rate, t.tuned_rate, policy.threshold):
             return
+        # Cost basis, in preference order (units must match the wall-clock
+        # EWMA arrival rate — the analytic model's device-second rates are
+        # incommensurable and would rarely move slots; see
+        # autotune.retune_slots):  (1) stall-and-measure per candidate when
+        # the policy asks; (2) the stepper's free wall-clock step-time EWMA;
+        # (3) the analytic model as a documented last resort.
         kw = {"headroom": policy.headroom,
-              "measured_sweep_s": policy.use_measured_cost or None}
+              "measured_sweep_s": policy.use_measured_cost or None,
+              "measured_step_unit_s": t.step_unit_s()}
         if policy.candidates is not None:
             kw["candidates"] = policy.candidates
         new_slots = retune_slots(self._engines[name], rate, **kw)

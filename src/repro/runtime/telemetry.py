@@ -104,6 +104,13 @@ class EngineTelemetry:
     queue_depth: int = 0  # latest observed engine.in_flight
     utilization: float = 0.0  # EWMA of busy-slot fraction per step
     util_alpha: float = 0.2
+    # EWMA of measured WALL-CLOCK seconds per step unit (one resonator sweep
+    # for factorizer engines) — the cost basis online re-tunes prefer over
+    # the analytic model, whose rates are modeled device-seconds and not
+    # commensurable with the wall-clock arrival EWMA (see
+    # repro.engine.sharding.autotune.retune_slots).
+    _step_unit_s: float | None = None
+    step_alpha: float = 0.2
     _lat_window: list = dataclasses.field(default_factory=list)
     _lat_sum: float = 0.0
 
@@ -111,11 +118,23 @@ class EngineTelemetry:
         self.submitted += n
         self.arrivals.observe(now, n=n)
 
-    def on_step(self, busy_fraction: float, queue_depth: int) -> None:
+    def on_step(self, busy_fraction: float, queue_depth: int, *,
+                step_s: float | None = None, units: int = 0) -> None:
+        """``step_s``/``units``: measured wall seconds of this engine step
+        and the step units (sweeps) it executed — skipped for idle steps."""
         self.steps += 1
         self.queue_depth = queue_depth
         self.utilization += self.util_alpha * (
             float(busy_fraction) - self.utilization)
+        if step_s is not None and units > 0:
+            per = float(step_s) / units
+            self._step_unit_s = per if self._step_unit_s is None else \
+                (1 - self.step_alpha) * self._step_unit_s + \
+                self.step_alpha * per
+
+    def step_unit_s(self) -> float | None:
+        """Measured wall seconds per step unit (None until a busy step)."""
+        return self._step_unit_s
 
     def on_complete(self, latency_s: float) -> None:
         self.completed += 1
@@ -144,6 +163,7 @@ class EngineTelemetry:
             "utilization": round(self.utilization, 4),
             "arrival_rate_rps": self.arrivals.rate(now),
             "tuned_rate_rps": self.tuned_rate,
+            "step_unit_s": self._step_unit_s,
             "window_completed": len(lats),
             **rolling_latency_ms(lats),
             "latency_mean_all_ms": (self._lat_sum / self.completed * 1e3

@@ -260,3 +260,132 @@ def test_engine_latency_accounting(lvrf_setup):
         assert r.done_sweep >= r.submit_sweep
     st = eng.stats()
     assert st["completed"] == 3 and st["latency_p50_ms"] is not None
+
+
+# ---------------------------------------------------------------------------
+# Fused serving: the Pallas sweep behind Engine.submit/step/drain
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def lvrf_fused_setup():
+    """lvrf_rows compiled for the fused kernel (Jacobi) plus the matching
+    UNFUSED Jacobi spec — same key, same codebooks, same algorithm; the only
+    difference is where the sweep runs."""
+    spec_f = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0),
+                                   fused_step=True)
+    spec_u = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0),
+                                   synchronous=True)
+    cfg = lvrf.LVRFConfig()
+    atoms = lvrf.init_atoms(jax.random.split(jax.random.PRNGKey(0))[0], cfg)
+    return spec_f, spec_u, cfg, atoms
+
+
+def _serve_traj(spec, qs, keys, *, slots=4, resizes=()):
+    """Serve every query (pinned keys), optionally resizing mid-run; return
+    per-request (indices, iterations, sim, scores) plus the engine."""
+    eng = engine.Engine(spec, slots=slots, sweeps_per_step=3)
+    ids = [eng.submit(qs[i], keys=keys[i][None]) for i in range(qs.shape[0])]
+    fin = list(eng.step())
+    for s in resizes:
+        eng.resize(s)
+        fin += eng.step()
+    fin += eng.drain()
+    done = {r.id: r for r in fin}
+    reqs = [done[i] for i in ids]
+    return [(np.asarray(r.factorization.indices),
+             np.asarray(r.iterations),
+             np.asarray(r.factorization.reconstruction_sim),
+             np.asarray(r.factorization.scores)) for r in reqs], eng
+
+
+def test_fused_engine_bit_equals_unfused_and_solo(lvrf_fused_setup):
+    """Acceptance bar (single device): Engine with fused_step=True serves
+    bit-identical request trajectories to the unfused Jacobi path, and every
+    row reproduces its solo factorize() exactly."""
+    spec_f, spec_u, cfg, atoms = lvrf_fused_setup
+    assert fz.fused_sweep_eligible(spec_f.cfg)
+    assert not fz.fused_sweep_eligible(spec_u.cfg)
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.integers(0, cfg.n_values, (8, 3)))
+    qs = lvrf.encode_row(atoms, vals, cfg)
+    keys = jax.random.split(jax.random.PRNGKey(42), 8)
+    got_f, eng_f = _serve_traj(spec_f, qs, keys)
+    got_u, eng_u = _serve_traj(spec_u, qs, keys)
+    for tf, tu in zip(got_f, got_u):
+        for a, b in zip(tf, tu):
+            np.testing.assert_array_equal(a, b)
+    assert eng_f.sweeps_total == eng_u.sweeps_total
+    for i in range(8):  # fused solo runs agree too (shared sweep closures)
+        solo = fz.factorize(qs[i], spec_f.codebooks, keys[i], spec_f.cfg,
+                            spec_f.valid_mask)
+        np.testing.assert_array_equal(got_f[i][0][0], np.asarray(solo.indices))
+        assert int(got_f[i][1][0]) == int(solo.iterations)
+    # an explicit FusedConfig (smaller row-tile ceiling) threads through and
+    # changes nothing about the math
+    eng_t = engine.Engine(spec_f, slots=4, sweeps_per_step=3,
+                          fused=engine.FusedConfig(tn=8))
+    ids = [eng_t.submit(qs[i], keys=keys[i][None]) for i in range(8)]
+    done = {r.id: r for r in eng_t.drain()}
+    for i, rid in enumerate(ids):
+        np.testing.assert_array_equal(
+            np.asarray(done[rid].factorization.indices), got_f[i][0])
+        np.testing.assert_array_equal(np.asarray(done[rid].iterations),
+                                      got_f[i][1])
+
+
+def test_fused_engine_survives_mid_run_resize(lvrf_fused_setup):
+    """Warm-handoff resize THROUGH the fused kernel, including degenerate
+    slot counts (6 and 2 — not multiples of the 8-row MXU tile, so the
+    shrink exercises the pad-rows guard): trajectories stay bit-equal to
+    solo factorize() and to the unfused engine run with the same resizes."""
+    spec_f, spec_u, cfg, atoms = lvrf_fused_setup
+    rng = np.random.default_rng(4)
+    vals = jnp.asarray(rng.integers(0, cfg.n_values, (7, 3)))
+    good = lvrf.encode_row(atoms, vals, cfg)
+    junk = jnp.asarray(rng.normal(size=(3, cfg.vsa.dim)), jnp.float32)
+    qs = jnp.concatenate([good, junk])
+    keys = jax.random.split(jax.random.PRNGKey(7), 10)
+    got_f, eng_f = _serve_traj(spec_f, qs, keys, slots=8, resizes=(6, 2, 8))
+    got_u, _ = _serve_traj(spec_u, qs, keys, slots=8, resizes=(6, 2, 8))
+    assert eng_f.resizes_total == 3
+    for i in range(7):  # junk rows' scores are trajectory-noise; check good
+        for a, b in zip(got_f[i], got_u[i]):
+            np.testing.assert_array_equal(a, b)
+        solo = fz.factorize(good[i], spec_f.codebooks, keys[i], spec_f.cfg,
+                            spec_f.valid_mask)
+        np.testing.assert_array_equal(got_f[i][0][0], np.asarray(solo.indices))
+        assert int(got_f[i][1][0]) == int(solo.iterations)
+
+
+def test_nvsa_fused_flag_is_safe_noop_for_unitary():
+    """nvsa_abduction with fused_step=True: the default config is unitary +
+    stochastic, so fused_sweep_eligible is False and serving falls back to
+    the two-pass sweep — results identical to the plain spec."""
+    spec_f = engine.registry.build("nvsa_abduction", jax.random.PRNGKey(0),
+                                   fused_step=True)
+    spec_p = engine.registry.build("nvsa_abduction", jax.random.PRNGKey(0))
+    assert spec_f.cfg.fused_step and not spec_p.cfg.fused_step
+    assert not fz.fused_sweep_eligible(spec_f.cfg)
+    attrs = jnp.asarray(np.random.default_rng(0).integers(0, (5, 6, 10), (2, 3)))
+    qs = fz.bind_combo(spec_f.codebooks, attrs, spec_f.cfg.vsa)
+    keys = jax.random.split(jax.random.PRNGKey(3), 2)
+    for spec in (spec_f, spec_p):
+        eng = engine.Engine(spec, slots=2, sweeps_per_step=4)
+        ids = [eng.submit(qs[i], keys=keys[i][None]) for i in range(2)]
+        done = {r.id: r for r in eng.drain()}
+        np.testing.assert_array_equal(
+            np.stack([np.asarray(done[i].factorization.indices[0])
+                      for i in ids]),
+            np.asarray(attrs))
+
+
+def test_engine_rejects_bool_fused_kwarg(lvrf_fused_setup):
+    """fused= takes a FusedConfig; the natural misuse fused=True (confusing
+    it with the spec-level fused_step flag) must fail fast at construction
+    with a usable message, not as an AttributeError inside a jit trace."""
+    spec_f, _, _, _ = lvrf_fused_setup
+    with pytest.raises(TypeError, match="FusedConfig"):
+        engine.Engine(spec_f, slots=4, fused=True)
+    from repro.kernels.resonator_step import ops as rs_ops
+    with pytest.raises(TypeError, match="FusedConfig"):
+        rs_ops._cfg(True)

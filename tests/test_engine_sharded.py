@@ -266,6 +266,124 @@ def test_sharded_sweep_jaxpr_has_one_psum_per_scored_row():
 
 
 # ---------------------------------------------------------------------------
+# Fused serving on the mesh (mask-aware / shard-aware kernel variants)
+# ---------------------------------------------------------------------------
+
+def test_sharded_engine_fused_bit_equals_unfused_both_placements():
+    """Acceptance bar: ShardedEngine serves lvrf_rows with fused_step=True —
+    replicated placement runs the fused kernel per data shard (local row
+    counts down to n_loc=1, the degenerate-N regime), rows placement runs
+    the shard-aware kernel with one packed psum per factor — and every
+    trajectory is bit-identical to BOTH the single-device fused Engine and
+    the single-device UNFUSED Jacobi engine."""
+    r = run_with_devices(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp, numpy as np
+        from repro import engine
+        from repro.launch.mesh import make_host_mesh
+        from repro.models import lvrf
+
+        spec_f = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0),
+                                       fused_step=True)
+        spec_u = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0),
+                                       synchronous=True)
+        cfg = lvrf.LVRFConfig()
+        atoms = lvrf.init_atoms(jax.random.split(jax.random.PRNGKey(0))[0], cfg)
+        rng = np.random.default_rng(0)
+        vals = jnp.asarray(rng.integers(0, cfg.n_values, (8, 3)))
+        qs = lvrf.encode_row(atoms, vals, cfg)
+        keys = jax.random.split(jax.random.PRNGKey(42), 8)
+
+        def serve(eng):
+            ids = [eng.submit(qs[i], keys=keys[i][None]) for i in range(8)]
+            done = {r.id: r for r in eng.drain()}
+            return [done[i] for i in ids], eng.sweeps_total
+
+        def fields(reqs):
+            return {
+                "idx": [np.asarray(r.factorization.indices).tolist() for r in reqs],
+                "it": [np.asarray(r.iterations).tolist() for r in reqs],
+                "sim": [np.asarray(r.factorization.reconstruction_sim).tolist() for r in reqs],
+                "sc": [np.asarray(r.factorization.scores).tolist() for r in reqs],
+            }
+
+        base, base_sweeps = serve(engine.Engine(spec_f, slots=4,
+                                                sweeps_per_step=3))
+        want = fields(base)
+        unf, unf_sweeps = serve(engine.Engine(spec_u, slots=4,
+                                              sweeps_per_step=3))
+        out = {"fused_equals_unfused": fields(unf) == want
+                                       and unf_sweeps == base_sweeps}
+        mesh = make_host_mesh(4, 2)
+        for placement in ("replicated", "rows"):
+            got, sweeps = serve(engine.ShardedEngine(
+                spec_f, mesh=mesh, codebook_placement=placement, slots=4,
+                sweeps_per_step=3))
+            g = fields(got)
+            out[placement] = {k: g[k] == want[k] for k in want}
+            out[placement]["sweeps_equal"] = sweeps == base_sweeps
+        print(json.dumps(out))
+    """))
+    assert r["fused_equals_unfused"]
+    for placement in ("replicated", "rows"):
+        assert all(r[placement].values()), (placement, r[placement])
+
+
+def test_sharded_fused_sweep_jaxpr_has_one_psum_per_factor():
+    """The rows-sharded FUSED sweep must keep the unfused path's collective
+    contract: exactly F packed psums (zero-padded local scores + partial
+    projection per factor, produced by the shard-aware kernel) plus the
+    one-hot convergence gather — F+1 total, with the sweep itself lowered to
+    ONE pallas_call."""
+    r = run_with_devices(textwrap.dedent("""
+        import json, jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P
+        from repro import compat, engine
+        from repro.core import factorizer as fz
+        from repro.launch.mesh import make_host_mesh
+
+        spec = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0),
+                                     fused_step=True)
+        cfg, cb = spec.cfg, spec.codebooks
+        F, M, D = cb.shape
+        mesh = make_host_mesh(4, 2)
+        init_est = fz.superposition_init(cb, cfg)
+
+        def one_sweep(cb_loc, qs, st):
+            rs = fz.make_resonator(cb_loc, cfg, None, model_axis="model",
+                                   full_rows=M, init_est=init_est)
+            return rs.sweep(qs, st)
+
+        qs = jnp.zeros((8, D), jnp.float32)
+        rs0 = fz.make_resonator(cb, cfg, None)
+        st = rs0.init(qs, jax.random.split(jax.random.PRNGKey(0), 8))
+        state_spec = type(st)(*([P("data")] * 5 + [P()]))
+        f = compat.shard_map(one_sweep, mesh=mesh,
+                             in_specs=(P(None, "model", None), P("data"),
+                                       state_spec),
+                             out_specs=state_spec, check_vma=False)
+
+        def prims(jaxpr, out):
+            for eqn in jaxpr.eqns:
+                out.append(eqn.primitive.name)
+                for v in eqn.params.values():
+                    for sub in jax.tree.leaves(
+                            v, is_leaf=lambda x: isinstance(
+                                x, (jax.core.Jaxpr, jax.core.ClosedJaxpr))):
+                        if isinstance(sub, jax.core.ClosedJaxpr):
+                            prims(sub.jaxpr, out)
+                        elif isinstance(sub, jax.core.Jaxpr):
+                            prims(sub, out)
+            return out
+
+        names = prims(jax.make_jaxpr(f)(cb, qs, st).jaxpr, [])
+        print(json.dumps({"psums": names.count("psum"), "F": int(F),
+                          "pallas_calls": names.count("pallas_call")}))
+    """))
+    assert r["psums"] == r["F"] + 1, r
+    assert r["pallas_calls"] == 1, r
+
+
+# ---------------------------------------------------------------------------
 # Collective-aware scheduling (no mesh needed)
 # ---------------------------------------------------------------------------
 
@@ -337,6 +455,134 @@ def test_shard_graph_prices_collectives_into_the_plan():
     # pure data sharding adds no collectives
     assert not any(o.kind == "collective" for st in shard_graph(g, 4, 1).stages
                    for o in st.cost_ops)
+
+
+def test_sweep_cost_ops_fused_flag_halves_codebook_hbm():
+    """fused marks the projection gemm weight_resident: its codebook HBM
+    term (k*n bytes) disappears while flops are unchanged, and the default
+    flag follows the config's own fused-sweep eligibility."""
+    from repro.core import vsa as vsa_mod
+
+    cfg = fz.FactorizerConfig(vsa=vsa_mod.VSAConfig(1024, 1024),
+                              num_factors=3, codebook_size=16,
+                              algebra="bipolar")
+    two_pass = {o.name: o for o in fz.sweep_cost_ops(cfg, 64)}
+    fused = {o.name: o for o in fz.sweep_cost_ops(cfg, 64, fused=True)}
+    assert not two_pass["project"].weight_resident
+    assert fused["project"].weight_resident
+    m, k, n = fused["project"].dims
+    assert two_pass["project"].bytes_moved() - fused["project"].bytes_moved() \
+        == k * n  # exactly the codebook read
+    assert fused["project"].flops() == two_pass["project"].flops()
+    assert fused["scores"].bytes_moved() == two_pass["scores"].bytes_moved()
+    # default flag = fused_sweep_eligible(cfg)
+    import dataclasses as dc
+    cfg_f = dc.replace(cfg, fused_step=True, synchronous=True)
+    auto = {o.name: o for o in fz.sweep_cost_ops(cfg_f, 64)}
+    assert auto["project"].weight_resident
+    assert fz.fused_sweep_eligible(cfg_f)
+    assert not fz.fused_sweep_eligible(dc.replace(cfg_f, noise_std=0.3))
+    # ...and choose_slots prices the fused path as (weakly) cheaper
+    t_two = sharding.autotune.modeled_sweep_seconds(cfg, 64, fused=False)
+    t_fused = sharding.autotune.modeled_sweep_seconds(cfg, 64, fused=True)
+    assert t_fused <= t_two
+
+
+def test_shard_graph_packs_fused_pair_into_one_psum():
+    """A weight_resident gemm consuming another gemm is a fused pair: under
+    model sharding the pair gathers with ONE packed psum carrying both
+    outputs (the fused sharded sweep's contract), not two collectives."""
+    from repro.engine.sharding.costs import mark_fused
+
+    g = StageGraph("toy", (
+        Stage("s", None, symbolic=True,
+              cost_ops=(Op("score", "gemm", (64, 1024, 16), symbolic=True),
+                        Op("project", "gemm", (64, 16, 1024),
+                           deps=("score",), symbolic=True),
+                        Op("conv", "simd", (64,), deps=("project",),
+                           symbolic=True))),
+    ))
+    # two-pass: one psum per gemm
+    ops = {o.name: o for st in shard_graph(g, 1, 2).stages
+           for o in st.cost_ops}
+    assert "score_psum" in ops and "project_psum" in ops
+    # fused: the score's gather rides the pair's packed psum
+    gf = mark_fused(g)
+    ops_f = [o for st in shard_graph(gf, 1, 2).stages for o in st.cost_ops]
+    by_name = {o.name: o for o in ops_f}
+    assert "score_psum" not in by_name
+    packed = by_name["project_psum"]
+    assert packed.dims[0] == 4.0 * (64 * 16 + 64 * 1024)  # both outputs
+    assert by_name["conv"].deps == ("project_psum",)
+    assert sum(o.kind == "collective" for o in ops_f) == 1
+    # mark_fused(False) restores two-pass pricing
+    ops_u = {o.name: o for st in shard_graph(mark_fused(gf, False), 1, 2).stages
+             for o in st.cost_ops}
+    assert "score_psum" in ops_u and not ops_u["project"].weight_resident
+    # declaration order must not matter (cost_ops are hand-declared tuples),
+    # and a THIRD-PARTY consumer of the producer must wait on the packed
+    # gather while the pair's own edge stays raw
+    g_rev = StageGraph("rev", (
+        Stage("s", None, symbolic=True,
+              cost_ops=(Op("project", "gemm", (64, 16, 1024),
+                           deps=("score",), symbolic=True,
+                           weight_resident=True),
+                        Op("score", "gemm", (64, 1024, 16), symbolic=True),
+                        Op("argmax", "simd", (64 * 16,), deps=("score",),
+                           symbolic=True))),
+    ))
+    ops_r = {o.name: o for st in shard_graph(g_rev, 1, 2).stages
+             for o in st.cost_ops}
+    assert "score_psum" not in ops_r
+    assert ops_r["project_psum"].dims[0] == 4.0 * (64 * 16 + 64 * 1024)
+    assert ops_r["project"].deps == ("score",)  # pair edge stays raw
+    assert ops_r["argmax"].deps == ("project_psum",)  # third party waits
+    # a weight-resident CHAIN must not silently drop gathers: only the last
+    # pair packs; upstream gemms keep their own psums, and a third-party
+    # consumer of the head gemm waits on the head's gather
+    g_chain = StageGraph("chain", (
+        Stage("s", None, symbolic=True,
+              cost_ops=(Op("g1", "gemm", (64, 512, 32), symbolic=True),
+                        Op("g2", "gemm", (64, 32, 512), deps=("g1",),
+                           symbolic=True, weight_resident=True),
+                        Op("g3", "gemm", (64, 512, 32), deps=("g2",),
+                           symbolic=True, weight_resident=True),
+                        Op("use_g1", "simd", (64,), deps=("g1",),
+                           symbolic=True))),
+    ))
+    ops_c = {o.name: o for st in shard_graph(g_chain, 1, 2).stages
+             for o in st.cost_ops}
+    assert "g1_psum" in ops_c  # head gather NOT dropped
+    assert "g2_psum" not in ops_c  # middle rides the last pair's psum
+    assert ops_c["g3_psum"].dims[0] == 4.0 * (64 * 32 + 64 * 512)
+    assert ops_c["use_g1"].deps == ("g1_psum",)
+    assert ops_c["g2"].deps == ("g1_psum",)  # g1/g2 are NOT a packed pair
+    # plan_interleave threads the override end to end
+    g2 = StageGraph("toy2", (
+        Stage("n", None, symbolic=False,
+              cost_ops=(Op("g1", "gemm", (4096, 512, 512)),)),) + g.stages)
+    plan_f = plan_interleave(g2, shards=(1, 2), fused=True)
+    plan_u = plan_interleave(g2, shards=(1, 2), fused=False)
+    assert plan_f.makespan_overlap <= plan_u.makespan_overlap
+
+
+def test_retune_slots_measured_step_unit_is_wall_clock_basis():
+    """The unit-mismatch fix: analytic adSCH rates are modeled
+    device-seconds (orders of magnitude below wall cost), so an analytic
+    re-tune at a moderate wall-clock arrival rate never moves slots; a
+    measured wall-clock step cost at the SAME arrival rate does."""
+    spec = registry.build("lvrf_rows", jax.random.PRNGKey(0))
+    from repro.engine import Engine
+    from repro.engine.sharding.autotune import retune_slots
+
+    eng = Engine(spec, slots=4, sweeps_per_step=2)
+    # analytic: modeled device-second rates dwarf 50 rps -> smallest
+    # candidate keeps up -> verdict equals current slots -> no move
+    assert retune_slots(eng, 50.0) is None
+    # measured: 50 ms wall per sweep at the current 4 slots cannot retire
+    # 50 wall-clock requests/s -> the re-tune must move slots up
+    verdict = retune_slots(eng, 50.0, measured_step_unit_s=0.05)
+    assert verdict is not None and verdict > eng.slots
 
 
 def test_shard_ops_scales_batch_dims_only():

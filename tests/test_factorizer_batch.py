@@ -58,6 +58,52 @@ def test_batched_matches_scalar_bipolar_fused_jacobi():
     _assert_rows_match_scalar(cbs, qs, jax.random.PRNGKey(2), cfg)
 
 
+def test_batched_matches_scalar_bipolar_fused_masked():
+    """The mask-aware fused kernel path (fused_step + valid_mask — the
+    serving configuration the old guard silently kicked back to two-pass):
+    rows match their solo scalar runs exactly."""
+    sizes = (5, 6, 8)
+    cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(256, 256), num_factors=3,
+                              codebook_size=max(sizes), algebra="bipolar",
+                              synchronous=True, fused_step=True,
+                              max_iters=20, conv_threshold=0.5)
+    cbs = fz.make_codebooks(jax.random.PRNGKey(1), cfg)
+    mask = jnp.stack([jnp.arange(max(sizes)) < n for n in sizes])
+    idxs = jnp.stack([jax.random.randint(jax.random.PRNGKey(10 + f), (5,), 0, n)
+                      for f, n in enumerate(sizes)], -1)
+    qs = fz.bind_combo(cbs, idxs, cfg.vsa)
+    res = _assert_rows_match_scalar(cbs, qs, jax.random.PRNGKey(2), cfg, mask)
+    # masked scores: padded rows can never win the argmax
+    assert np.asarray(res.scores)[:, 0, sizes[0]:].max() <= -1e9
+
+
+def test_fused_masked_bit_equals_unfused_masked():
+    """fused_step only changes WHERE the sweep runs, never what it computes:
+    the masked fused Jacobi factorization is bit-identical to the masked
+    two-pass Jacobi factorization — every result field, including scores."""
+    import dataclasses
+
+    sizes = (5, 6, 8)
+    cfg_u = fz.FactorizerConfig(vsa=vsa.VSAConfig(256, 256), num_factors=3,
+                                codebook_size=max(sizes), algebra="bipolar",
+                                synchronous=True, max_iters=20,
+                                conv_threshold=0.5)
+    cfg_f = dataclasses.replace(cfg_u, fused_step=True)
+    assert fz.fused_sweep_eligible(cfg_f) and not fz.fused_sweep_eligible(cfg_u)
+    cbs = fz.make_codebooks(jax.random.PRNGKey(1), cfg_f)
+    mask = jnp.stack([jnp.arange(max(sizes)) < n for n in sizes])
+    idxs = jnp.stack([jax.random.randint(jax.random.PRNGKey(10 + f), (6,), 0, n)
+                      for f, n in enumerate(sizes)], -1)
+    qs = fz.bind_combo(cbs, idxs, cfg_f.vsa)
+    key = jax.random.PRNGKey(2)
+    rf = fz.factorize_batch(qs, cbs, key, cfg_f, mask)
+    ru = fz.factorize_batch(qs, cbs, key, cfg_u, mask)
+    for name in rf._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(rf, name)),
+                                      np.asarray(getattr(ru, name)),
+                                      err_msg=name)
+
+
 def test_batched_matches_scalar_unitary():
     cfg = fz.FactorizerConfig(vsa=vsa.VSAConfig(512, 4), num_factors=3,
                               codebook_size=10, algebra="unitary",

@@ -80,6 +80,92 @@ def test_resonator_step_batch_matches_ref(n, act):
     assert bool((e_k == e_r).all())
 
 
+@pytest.mark.parametrize("n", [1, 8, 130])
+@pytest.mark.parametrize("act", ["identity", "abs"])
+def test_resonator_step_batch_masked_bit_equals_ref(n, act):
+    """Mask-aware fused sweep == masked oracle BITWISE (all-integer fp32
+    arithmetic on bipolar inputs) across pad boundaries — N=1 (everything is
+    padding), N=130 (ragged row tiles) — with ragged factor cardinalities
+    including an ALL-invalid factor."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n), 3)
+    F, M, D = 3, 12, 256
+    cbs = _bipolar(k1, (F, M, D))
+    qs = _bipolar(k2, (n, D))
+    est = _bipolar(k3, (n, F, D))
+    mask = jnp.stack([jnp.arange(M) < m for m in (5, 12, 0)])
+    a_k, e_k = rsk.resonator_step_batch_masked(qs, est, cbs, mask,
+                                               activation=act, interpret=True)
+    a_r, e_r = rsr.resonator_step_batch_masked_ref(qs, est, cbs, mask,
+                                                   activation=act)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_r))
+    # invalid rows can never win the argmax; the all-invalid factor's
+    # projection is exactly zero -> saturates to +1 everywhere
+    assert np.asarray(a_k)[:, 0, 5:].max() <= -1e9
+    np.testing.assert_array_equal(np.asarray(e_k)[:, 2], 1.0)
+
+
+@pytest.mark.parametrize("n", [1, 7, 130])
+def test_resonator_step_batch_local_gathers_to_masked_ref(n):
+    """Shard-aware fused sweep: two shards' (padded scores, partial
+    projections) summed — the psum the sharded sweep issues — reproduce the
+    masked full sweep BITWISE, and the padded score supports are disjoint."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(n + 50), 3)
+    F, M, D = 3, 12, 256
+    cbs = _bipolar(k1, (F, M, D))
+    qs = _bipolar(k2, (n, D))
+    est = _bipolar(k3, (n, F, D))
+    mask = jnp.stack([jnp.arange(M) < m for m in (5, 12, 7)])
+    M2 = M // 2
+    acc_a, acc_p = jnp.zeros((n, F, M)), jnp.zeros((n, F, D))
+    for s in range(2):  # one iteration per model shard
+        a_l, p_l = rsk.resonator_step_batch_local(
+            qs, est, cbs[:, s * M2:(s + 1) * M2],
+            mask[:, s * M2:(s + 1) * M2], interpret=True)
+        pad = jnp.zeros((n, F, M))
+        padded = jax.lax.dynamic_update_slice_in_dim(pad, a_l, s * M2, axis=-1)
+        assert not bool(jnp.any((acc_a != 0) & (padded != 0)))  # disjoint
+        acc_a, acc_p = acc_a + padded, acc_p + p_l
+    a_full = jnp.where(mask[None], acc_a, -1e9)
+    e_full = jnp.where(acc_p >= 0, 1.0, -1.0)
+    a_r, e_r = rsr.resonator_step_batch_masked_ref(qs, est, cbs, mask)
+    np.testing.assert_array_equal(np.asarray(a_full), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(e_full), np.asarray(e_r))
+
+
+@pytest.mark.parametrize("n", list(range(1, 17)) + [64, 100, 130, 255, 256, 257])
+def test_row_tile_pad_rows_invariant(n):
+    """Explicit pad-rows invariant for every N an engine resize can produce
+    (N < 8, N not a multiple of 8 after a shrink): the tile is MXU-shaped,
+    the padded batch tiles exactly, and padding stays under one tile."""
+    tn = rsk.row_tile(n)
+    assert tn >= 8 and tn % 8 == 0
+    pad = (-n) % tn
+    assert 0 <= pad < tn
+    assert (n + pad) % tn == 0
+
+
+def test_row_tile_rejects_degenerate_inputs():
+    with pytest.raises(ValueError, match="at least one row"):
+        rsk.row_tile(0)
+    with pytest.raises(ValueError, match="multiple of 8"):
+        rsk.row_tile(16, tn=12)
+
+
+@pytest.mark.parametrize("n", [1, 2, 6])
+def test_resonator_step_batch_degenerate_n_matches_ref(n):
+    """Sub-tile batches (the shrink-resize regime) still run the fused grid
+    and match the oracle exactly."""
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(77 + n), 3)
+    F, M, D = 2, 6, 128
+    cbs, qs, est = _bipolar(k1, (F, M, D)), _bipolar(k2, (n, D)), \
+        _bipolar(k3, (n, F, D))
+    a_k, e_k = rsk.resonator_step_batch(qs, est, cbs, interpret=True)
+    a_r, e_r = rsr.resonator_step_batch_ref(qs, est, cbs)
+    np.testing.assert_array_equal(np.asarray(a_k), np.asarray(a_r))
+    np.testing.assert_array_equal(np.asarray(e_k), np.asarray(e_r))
+
+
 def test_resonator_step_scalar_wrapper_matches_batch_row():
     k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
     F, M, D = 3, 10, 256

@@ -83,6 +83,49 @@ def test_should_retune_triggers_exactly_at_threshold():
         rt.should_retune(1.0, 1.0, 1.0)
 
 
+def test_telemetry_step_cost_ewma_units_and_idle_steps():
+    """The step-time EWMA is wall seconds PER STEP UNIT (sweep) and idle
+    steps (zero units) must not dilute it — the measured cost basis
+    _maybe_retune hands to retune_slots so both sides of the service-vs-
+    arrival comparison are wall-clock (the unit-mismatch satellite)."""
+    t = rt.telemetry.EngineTelemetry()
+    assert t.step_unit_s() is None
+    t.on_step(1.0, 4, step_s=0.4, units=4)  # 0.1 s / sweep
+    assert t.step_unit_s() == pytest.approx(0.1)
+    before = t.step_unit_s()
+    t.on_step(0.0, 0)  # idle step: no timing info, EWMA untouched
+    t.on_step(0.0, 0, step_s=0.5, units=0)  # zero units: ignored too
+    assert t.step_unit_s() == before
+    t.on_step(1.0, 4, step_s=0.8, units=4)  # 0.2 s/sweep -> EWMA moves up
+    assert before < t.step_unit_s() < 0.2
+    assert t.snapshot()["step_unit_s"] == t.step_unit_s()
+
+
+def test_runtime_records_wall_clock_step_cost(lvrf_setup):
+    """A served runtime leaves a positive measured step-cost estimate in
+    telemetry (the stepper times every busy engine step for free) — and the
+    FIRST busy step of a program generation, which pays JIT compilation, is
+    excluded so it cannot poison the re-tune cost basis."""
+    spec, cfg, atoms = lvrf_setup
+    # junk rows never converge, so the engine runs many busy steps past the
+    # compile-bearing first one
+    _, good, junk = _lvrf_queries(cfg, atoms, n_good=4, n_junk=2, seed=11)
+    r = rt.Runtime()
+    r.register("lvrf", engine.Engine(spec, slots=2, sweeps_per_step=2))
+    with r:
+        gids = [r.submit("lvrf", good[i]) for i in range(4)]
+        for j in range(2):
+            r.submit("lvrf", junk[j])
+        for g in gids:
+            r.result(g, timeout=RESULT_TIMEOUT_S)
+        r.drain(timeout=RESULT_TIMEOUT_S)
+    t = r.telemetry["lvrf"]
+    assert t.step_unit_s() is not None and t.step_unit_s() > 0
+    # steady-state sweeps are milliseconds; a compile-contaminated EWMA
+    # (first-step compile is ~seconds) would sit orders of magnitude higher
+    assert t.step_unit_s() < 1.0
+
+
 # ---------------------------------------------------------------------------
 # Warm-handoff resize (the re-tune mechanism) on the real engine
 # ---------------------------------------------------------------------------
