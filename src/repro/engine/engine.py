@@ -170,6 +170,7 @@ class Engine:
         self.sweeps_total = 0
         self.steps_total = 0
         self.resizes_total = 0
+        self.recoveries_total = 0
         # All-time accounting kept incrementally: `completed` is a lookup the
         # runtime may evict resolved requests from, so totals must not scan it.
         self.completed_total = 0
@@ -374,6 +375,69 @@ class Engine:
         self.resizes_total += 1
         self._step_cost_cache = None
 
+    # -- fault tolerance ---------------------------------------------------
+
+    def recover(self) -> int:
+        """Rebuild after a fault and replay in-flight work; returns the
+        number of replayed (request, query) rows.
+
+        The device programs and slot state are rebuilt from scratch
+        (``_build_programs`` — whatever the fault left behind, including
+        non-finite resonator state, is discarded) and every live slot row
+        goes back to the FRONT of the queue in its original submission
+        order — the same bit-safe re-queue contract :meth:`resize` uses for
+        shrink overflow.  A replayed row re-runs from its pinned per-query
+        key, so its recovered trajectory is the solo ``factorize(q, key)``
+        trajectory: bit-equal to a fault-free run, just later.  Queued work
+        and already-retired rows are untouched.
+        """
+        live = [(s, self._owner[s]) for s in range(self.slots)
+                if self._owner[s] is not None]
+        for _, owner in reversed(live):  # preserve submission order up front
+            self._queue.appendleft(owner)
+        self._build_programs()  # fresh parked state; corrupt state dropped
+        self._owner = [None] * self.slots
+        self.recoveries_total += 1
+        return len(live)
+
+    def cancel(self, request_id: int) -> bool:
+        """Preempt request `request_id`: drop its queued rows and park its
+        live slots (``done`` mask set, so the sweep freezes them and
+        ``_fill`` treats them as free).  Slot reclamation only — other rows'
+        trajectories are untouched (rows are independent; parking is the
+        same mask the sweep itself uses to freeze converged rows).  Returns
+        whether anything was reclaimed (False for unknown/completed ids).
+        """
+        before = len(self._queue)
+        self._queue = deque((req, qi) for req, qi in self._queue
+                            if req.id != request_id)
+        reclaimed = len(self._queue) < before
+        parked = [s for s in range(self.slots)
+                  if self._owner[s] is not None
+                  and self._owner[s][0].id == request_id]
+        for s in parked:
+            self._owner[s] = None
+        if parked:
+            self.state = self.state._replace(
+                done=self.state.done.at[jnp.asarray(parked)].set(True))
+        return reclaimed or bool(parked)
+
+    def health_check(self) -> str | None:
+        """Cadenced corruption probe: non-finite resonator state on any LIVE
+        row (parked rows hold stale-but-finite values) is silent poison —
+        scores and convergence sims go NaN, the row burns to ``max_iters``
+        and decodes garbage.  Returns a description for the supervisor to
+        quarantine on, or None when healthy."""
+        live = [s for s in range(self.slots) if self._owner[s] is not None]
+        if not live:
+            return None
+        est = np.asarray(self.state.est[jnp.asarray(live)])
+        bad = [live[i] for i in range(len(live))
+               if not np.isfinite(est[i]).all()]
+        if bad:
+            return f"non-finite resonator state in slot rows {bad}"
+        return None
+
     # -- introspection -----------------------------------------------------
 
     @property
@@ -411,6 +475,7 @@ class Engine:
             "sweeps_total": self.sweeps_total,
             "completed": self.completed_total,
             "resizes": self.resizes_total,
+            "recoveries": self.recoveries_total,
             "window_completed": len(lats),
             **rolling_latency_ms(lats),
             "latency_mean_all_ms": (self._lat_sum / self.completed_total * 1e3

@@ -184,6 +184,17 @@ class ShardedEngine(Engine):
                              f"size ({self.data_shards})")
         super().resize(slots)
 
+    def recover(self) -> int:
+        """Fault recovery on the mesh (see :meth:`Engine.recover`): the
+        inherited replay path runs through THIS class's ``_build_programs``,
+        so the rebuild re-lowers the shard_map programs, re-places the
+        codebooks per ``codebook_placement``, and re-shards the fresh parked
+        state over ``data`` — a recovered mesh engine replays its in-flight
+        rows under exactly the collectives contract it was serving with
+        (one packed psum per factor for rows placement), keeping the replay
+        bit-equal to the single-device engine's."""
+        return super().recover()
+
     def stats(self) -> dict:
         st = super().stats()
         st.update({"mesh": dict(self.mesh.shape),

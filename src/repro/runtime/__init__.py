@@ -10,10 +10,19 @@ the structural :class:`Steppable` protocol, with
     ``Runtime.result(id)`` blocks),
   * cost-weighted stepping (adSCH-modeled step cost x queue depth picks the
     next engine, so cheap symbolic bursts aren't starved by LM decode),
-  * per-engine EWMA arrival-rate telemetry over submit timestamps, and
+  * per-engine EWMA arrival-rate telemetry over submit timestamps,
   * online re-tuning: drift past a :class:`RetunePolicy` threshold re-runs
     ``choose_slots`` and applies the verdict via the engines' warm-handoff
-    ``resize`` — bit-equality of in-flight trajectories preserved.
+    ``resize`` — bit-equality of in-flight trajectories preserved, and
+  * per-engine supervision under a :class:`FailurePolicy`: a faulting
+    engine is quarantined (exponential backoff) and recovered by rebuild +
+    replay from pinned keys — bit-equal to a fault-free run — while the
+    other engines keep serving; deadlines (``submit(deadline_s=)``),
+    bounded-queue shedding, and a heartbeat watchdog guarantee every
+    future resolves with a result or a structured
+    :class:`~repro.runtime.faults.FaultError`, never a hang.  The seeded
+    chaos harness lives in :mod:`repro.runtime.faults`
+    (:class:`FaultPlan` / :class:`ChaosEngine`).
 
 Typical use::
 
@@ -27,15 +36,23 @@ Typical use::
         tid = r.submit("lm", prompt_tokens, max_new_tokens=16)
         print(r.result(rid).result, r.result(tid).result["tokens"])
 """
+from repro.runtime.faults import (ChaosEngine, DeadlineExceededError,
+                                  EngineDeadError, FaultError, FaultPlan,
+                                  InjectedFault, ShedError, WedgedError,
+                                  maybe_chaos_wrap)
 from repro.runtime.lm import LMEngine, LMRequest
 from repro.runtime.protocol import (Steppable, step_cost_seconds,
-                                    supports_resize)
-from repro.runtime.runtime import RetunePolicy, Runtime
+                                    supports_cancel, supports_health_check,
+                                    supports_recover, supports_resize)
+from repro.runtime.runtime import FailurePolicy, RetunePolicy, Runtime
 from repro.runtime.telemetry import (ArrivalEstimator, EngineTelemetry,
                                      should_retune)
 
 __all__ = [
-    "ArrivalEstimator", "EngineTelemetry", "LMEngine", "LMRequest",
-    "RetunePolicy", "Runtime", "Steppable", "should_retune",
-    "step_cost_seconds", "supports_resize",
+    "ArrivalEstimator", "ChaosEngine", "DeadlineExceededError",
+    "EngineDeadError", "EngineTelemetry", "FailurePolicy", "FaultError",
+    "FaultPlan", "InjectedFault", "LMEngine", "LMRequest", "RetunePolicy",
+    "Runtime", "ShedError", "Steppable", "WedgedError", "maybe_chaos_wrap",
+    "should_retune", "step_cost_seconds", "supports_cancel",
+    "supports_health_check", "supports_recover", "supports_resize",
 ]

@@ -75,6 +75,9 @@ class LMEngine:
         self.eos_id = eos_id
         self.spec = registry.build("lm_decode", None, cfg=cfg, batch=slots,
                                    prompt_len=prompt_len_hint)
+        # kept for fault recovery: recover() rebuilds the device layer from
+        # these (params are read-only serving state, never mutated by decode)
+        self._params, self._max_len = params, max_len
         self.serve = ServeEngine(cfg, params, slots, max_len)
         self.decode_per_step = (
             derive_sweeps_per_step(self.spec, slots, hw)
@@ -86,6 +89,7 @@ class LMEngine:
         self.completed_total = 0  # all-time (runtime may evict `completed`)
         self.steps_total = 0
         self.tokens_total = 0
+        self.recoveries_total = 0
         self._lat_window: list = []
         ops = step_unit_ops(self.spec, slots)
         self._step_cost = self.decode_per_step * (
@@ -174,6 +178,45 @@ class LMEngine:
             raise RuntimeError("drain() exceeded max_steps")
         return sorted(out, key=lambda r: r.id)
 
+    # -- fault tolerance ---------------------------------------------------
+
+    def recover(self) -> int:
+        """Rebuild the device layer after a fault and replay in-flight
+        generations; returns the number of replayed requests.
+
+        A fresh :class:`ServeEngine` replaces the (possibly corrupt) KV
+        cache and slot bookkeeping; live requests re-queue at the FRONT in
+        submission order and re-run prefill + decode from their pinned
+        prompts.  Greedy decode is deterministic, so a replayed request's
+        tokens are bit-equal to a fault-free run — partially generated
+        tokens are simply regenerated (``_retire`` reads the device layer's
+        ``generated``, which the rebuild reset).
+        """
+        live = [req for req in self._owner if req is not None]
+        for req in reversed(live):
+            self._queue.appendleft(req)
+        self.serve = ServeEngine(self.cfg, self._params, self.slots,
+                                 self._max_len)
+        self._owner = [None] * self.slots
+        self.recoveries_total += 1
+        return len(live)
+
+    def cancel(self, request_id: int) -> bool:
+        """Preempt one request: drop it from the queue or free its slot
+        (the device layer's ``active`` mask stops decoding it — the same
+        parking ``_retire`` uses).  Returns whether anything was reclaimed.
+        """
+        for i, req in enumerate(self._queue):
+            if req.id == request_id:
+                del self._queue[i]
+                return True
+        for slot, req in enumerate(self._owner):
+            if req is not None and req.id == request_id:
+                self._owner[slot] = None
+                self.serve.active[slot] = False
+                return True
+        return False
+
     # -- introspection -----------------------------------------------------
 
     @property
@@ -191,6 +234,7 @@ class LMEngine:
             "steps": self.steps_total,
             "completed": self.completed_total,
             "tokens_total": self.tokens_total,
+            "recoveries": self.recoveries_total,
             "window_completed": len(lats),
             **rolling_latency_ms(lats),
         }

@@ -20,13 +20,24 @@ Engines are NOT thread-safe; the runtime serializes every mutating call
 lock.  The protocol is structural (no inheritance): ``Engine`` and
 ``ShardedEngine`` already satisfy it unmodified.
 
-Two optional members refine the runtime's behavior when present:
+Five optional members refine the runtime's behavior when present:
 
   * ``step_cost_s() -> float`` — adSCH-modeled wall seconds of one ``step()``
     burst, feeding the cost-weighted engine picking
     (:func:`step_cost_seconds` provides the fallback);
   * ``resize(slots)`` — warm-handoff slot re-tune, the hook the EWMA-driven
-    re-tuner calls (engines without it are never re-tuned).
+    re-tuner calls (engines without it are never re-tuned);
+  * ``recover() -> int`` — rebuild after a fault and replay in-flight work
+    from pinned keys (the bit-safe re-queue contract ``resize`` introduced).
+    The supervisor's quarantine/restart path needs it: engines WITHOUT it
+    go straight to dead on their first fault (their in-flight futures fail
+    with a structured error instead of being replayed);
+  * ``cancel(local_id) -> bool`` — preemption-safe single-request reclaim,
+    used when a ``submit(deadline_s=)`` budget expires (without it the
+    future still fails on time, but the slot runs the row to completion);
+  * ``health_check() -> str | None`` — cadenced corruption probe (e.g.
+    non-finite resonator state); a non-None description routes the engine
+    through the same quarantine/replay path as a step exception.
 """
 from __future__ import annotations
 
@@ -68,3 +79,19 @@ def step_cost_seconds(engine) -> float:
 def supports_resize(engine) -> bool:
     """Whether the EWMA re-tuner may call ``engine.resize``."""
     return callable(getattr(engine, "resize", None))
+
+
+def supports_recover(engine) -> bool:
+    """Whether the supervisor may quarantine-and-replay this engine (no
+    ``recover`` means a fault kills it outright)."""
+    return callable(getattr(engine, "recover", None))
+
+
+def supports_cancel(engine) -> bool:
+    """Whether deadline expiry can reclaim the request's slot immediately."""
+    return callable(getattr(engine, "cancel", None))
+
+
+def supports_health_check(engine) -> bool:
+    """Whether the supervisor's cadenced corruption probe applies."""
+    return callable(getattr(engine, "health_check", None))

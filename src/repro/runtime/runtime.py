@@ -1,4 +1,4 @@
-"""Runtime: async multi-engine orchestration with workload-aware re-tuning.
+"""Runtime: supervised async multi-engine orchestration with re-tuning.
 
 The production entry point of the system (ROADMAP: "async ``submit`` path
 for online serving").  One background stepper thread owns every registered
@@ -8,22 +8,25 @@ engine; callers submit from any thread and block on per-request futures:
     rt.register("lvrf", Engine(spec, slots=16), retune=RetunePolicy())
     rt.register("lm", LMEngine(cfg, params))
     with rt:                       # starts/stops the stepper thread
-        rid = rt.submit("lvrf", row_vec)        # returns immediately
+        rid = rt.submit("lvrf", row_vec, deadline_s=0.5)
         req = rt.result(rid, timeout=30)        # blocks on the future
 
-Three mechanisms, one loop:
+Four mechanisms, one loop:
 
 **Cost-weighted stepping.**  Engines accrue *virtual time*: stepping engine
 e advances ``vt[e]`` by its adSCH-modeled step cost divided by its backlog,
 and the loop always steps the busy engine with the smallest ``vt``.  Cheap
 steps and deep queues both earn more turns — a symbolic engine whose sweep
 burst is 100x cheaper than an LM decode burst gets ~100x the steps instead
-of alternating 1:1 behind it (the starvation the ISSUE names), and within
-equal costs the deeper backlog is served first.
+of alternating 1:1 behind it, and within equal costs the deeper backlog is
+served first.
 
-**Telemetry.**  Every ``submit`` stamps the per-engine EWMA arrival
-estimator (:mod:`repro.runtime.telemetry`); every step updates utilization
-and queue-depth counters.  ``stats()`` merges engine and telemetry views.
+**Telemetry.**  Successful ingest stamps the per-engine EWMA arrival
+estimator (:mod:`repro.runtime.telemetry`) with the request's SUBMIT
+timestamp — rejected and shed requests never stamp it, so overload cannot
+inflate the arrival estimate into bogus re-tunes; every step updates
+utilization and queue-depth counters.  ``stats()`` merges engine,
+telemetry, and supervision views.
 
 **Online re-tuning.**  When an engine's arrival estimate drifts past its
 :class:`RetunePolicy` threshold, the loop re-runs
@@ -33,22 +36,67 @@ engine's warm-handoff ``resize`` — in-flight rows carry over bit-exactly,
 so a re-tune is invisible to request trajectories (asserted in
 tests/test_runtime.py).
 
-Thread-safety contract: engines are single-threaded; ONLY the stepper
-thread touches them (submissions are staged in a thread-safe pending queue
-and ingested on-thread).  ``Runtime.stats``/``drain`` synchronize through
-the same lock the stepper holds per iteration.
+**Supervision.**  Failure of one engine must not take down the rest — the
+runtime's availability contract is *per-engine*, driven by each engine's
+:class:`FailurePolicy`:
+
+  * a ``step()`` exception (or a failed cadenced ``health_check`` — e.g.
+    non-finite resonator state) **quarantines that engine only**: it leaves
+    the stepping rotation for an exponential-backoff interval while every
+    other engine keeps serving;
+  * recovery calls the engine's ``recover()`` — rebuild device programs +
+    state, replay in-flight requests from their pinned keys (the bit-safe
+    re-queue contract ``Engine.resize`` introduced) — so recovered
+    trajectories are **bit-equal to a fault-free run**, just later;
+  * an engine that exhausts ``max_restarts`` (or has no ``recover()``) is
+    **dead**: its outstanding futures fail with
+    :class:`~repro.runtime.faults.EngineDeadError` and later submits to it
+    fail fast — never a hang;
+  * ``submit(deadline_s=)`` arms a per-request deadline: on expiry the
+    future fails with :class:`DeadlineExceededError` and the slot is
+    reclaimed through the engine's preemption-safe ``cancel``;
+  * ``max_pending`` bounds the staging queue — overload sheds new work at
+    ``submit`` with :class:`ShedError` instead of queueing unboundedly;
+  * a **heartbeat watchdog** thread monitors the in-progress step: a step
+    wedged past ``watchdog_s`` marks that engine dead, fails its futures
+    with :class:`WedgedError`, and hands the HEALTHY engines to a
+    replacement stepper thread (the wedged thread, stuck inside the engine,
+    is abandoned; if it ever returns it notices its generation is stale and
+    exits without touching anything) — ``drain()`` resolves instead of
+    hanging forever behind one stuck kernel class.
+
+The chaos invariant all of this serves (asserted in
+tests/test_runtime_faults.py): under any seeded
+:class:`~repro.runtime.faults.FaultPlan`, every submitted future resolves —
+a result or a structured :class:`~repro.runtime.faults.FaultError` — and
+replayed requests are bit-equal to a fault-free run.
+
+Thread-safety contract: engines are single-threaded; ONLY the (current)
+stepper thread touches them (submissions are staged in a thread-safe
+pending queue and ingested on-thread).  ``Runtime.stats``/``drain``
+synchronize through the same lock the stepper holds per iteration.  After
+a watchdog takeover the wedged thread still holds the *previous* lock
+object forever — the runtime swaps in a fresh lock, so only the dead
+engine (which the replacement stepper never touches) stays behind it.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import threading
 import time
+import warnings
 from collections import deque
 from concurrent.futures import Future, TimeoutError as FutureTimeout
 
 from repro.engine.sharding.autotune import retune_slots
+from repro.runtime import faults as flt
 from repro.runtime import telemetry as tele
-from repro.runtime.protocol import step_cost_seconds, supports_resize
+from repro.runtime.protocol import (step_cost_seconds, supports_cancel,
+                                    supports_health_check, supports_recover,
+                                    supports_resize)
+
+_EVENT_LOG_CAP = 64  # per-engine supervision events kept for diagnosis
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,14 +114,70 @@ class RetunePolicy:
     use_measured_cost: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class FailurePolicy:
+    """Per-engine supervision knobs: restart budget, backoff, probe cadence.
+
+    The restart budget is ALL-TIME (not a sliding window): an engine that
+    keeps faulting is structurally broken — the paper-scale runtime would
+    rather fail its traffic fast than flap forever.
+    """
+
+    max_restarts: int = 3  # quarantine/recover cycles before dead
+    backoff_initial_s: float = 0.05  # first quarantine interval
+    backoff_factor: float = 2.0  # exponential growth per restart
+    backoff_max_s: float = 2.0  # interval ceiling
+    # engine steps between health_check() corruption probes (0 disables);
+    # the probe costs one live-row device->host gather, so the cadence is
+    # also the worst-case latency to catch silent state corruption
+    health_check_every: int = 64
+
+
+@dataclasses.dataclass
+class _Supervision:
+    """Mutable per-engine supervisor record (stepper-thread-owned)."""
+
+    state: str = "serving"  # serving | quarantined | dead
+    restarts: int = 0
+    until: float = 0.0  # quarantine expiry (runtime clock)
+    steps_since_probe: int = 0
+    awaiting_completion: bool = False  # recovery happened; next finish logs
+    last_error: BaseException | None = None
+    events: list = dataclasses.field(default_factory=list)  # (t, tag)
+
+    def log(self, t: float, tag: str) -> None:
+        self.events.append((t, tag))
+        del self.events[:-_EVENT_LOG_CAP]
+
+
+class _Takeover(BaseException):
+    """Private control flow: this stepper thread's generation went stale
+    (watchdog takeover) — unwind without touching shared state."""
+
+
 class Runtime:
     """Async serving frontend over one or more ``Steppable`` engines."""
 
-    def __init__(self, *, clock=time.monotonic, idle_sleep_s: float = 1e-3):
+    def __init__(self, *, clock=time.monotonic, idle_sleep_s: float = 1e-3,
+                 max_pending: int | None = None,
+                 watchdog_s: float | None = 180.0,
+                 failure: FailurePolicy | None = None):
         self._clock = clock
         self._idle_sleep_s = idle_sleep_s
+        # admission control: staged-but-not-ingested requests past this bound
+        # are shed at submit() (None: unbounded)
+        self._max_pending = max_pending
+        # heartbeat watchdog: a single engine step wedged past this declares
+        # the engine dead and replaces the stepper (None disables).  The
+        # default is far above any legitimate step — including first-step JIT
+        # compiles — because a wedged engine is unrecoverable by design.
+        self._watchdog_s = watchdog_s
+        self._default_failure = failure if failure is not None \
+            else FailurePolicy()
         self._engines: dict = {}
         self._policies: dict = {}
+        self._failure: dict = {}  # name -> FailurePolicy
+        self._sup: dict = {}  # name -> _Supervision
         self.telemetry: dict = {}
         self._vt: dict = {}  # virtual time per engine (cost-weighted fairness)
         # program generation (resizes_total) whose compile-bearing first busy
@@ -82,14 +186,21 @@ class Runtime:
         self._vclock = 0.0  # service level of the last-stepped engine
         self._was_busy: set = set()
         self._steps_since_check: dict = {}
-        self._pending: deque = deque()  # (name, gid, payload, kwargs)
+        self._pending: deque = deque()  # (name, gid, payload, kwargs, t_sub)
         self._futures: dict = {}  # gid -> Future
         self._gid_of: dict = {}  # (name, engine-local id) -> gid
+        self._local_of: dict = {}  # gid -> (name, engine-local id)
+        self._deadlines: list = []  # heap of (expiry_t, gid, name)
         self._next_gid = 0
         self._lock = threading.Lock()  # serializes all engine access
-        self._submit_lock = threading.Lock()  # tiny: gid + telemetry stamps
+        self._submit_lock = threading.Lock()  # tiny: gid + future bookkeeping
+        self._takeover_lock = threading.Lock()  # watchdog vs stop() races
         self._wake = threading.Event()
         self._thread: threading.Thread | None = None
+        self._watch_thread: threading.Thread | None = None
+        self._watch_stop = threading.Event()
+        self._stepping: tuple | None = None  # (engine, t0) while in step()
+        self._gen = 0  # stepper generation; bumped by start() and takeovers
         self._running = False
         self._stopped = False  # stop() was called; submits must not hang
         self._error: BaseException | None = None
@@ -97,17 +208,23 @@ class Runtime:
     # -- registration ------------------------------------------------------
 
     def register(self, name: str, engine, *,
-                 retune: RetunePolicy | None = None) -> None:
+                 retune: RetunePolicy | None = None,
+                 failure: FailurePolicy | None = None) -> None:
         """Add an engine under `name`.  ``retune`` opts it into EWMA-driven
-        slot re-tuning (requires a ``resize``-capable engine)."""
+        slot re-tuning (requires a ``resize``-capable engine); ``failure``
+        overrides the runtime's default :class:`FailurePolicy` for it."""
         if name in self._engines:
             raise ValueError(f"engine {name!r} already registered")
+        engine = flt.maybe_chaos_wrap(engine)  # CI transparency run hook
         if retune is not None and not supports_resize(engine):
             raise ValueError(f"engine {name!r} has no resize(); it cannot "
                              "opt into re-tuning")
         with self._lock:
             self._engines[name] = engine
             self._policies[name] = retune
+            self._failure[name] = failure if failure is not None \
+                else self._default_failure
+            self._sup[name] = _Supervision()
             t = tele.EngineTelemetry()
             if retune is not None and retune.baseline_rps is not None:
                 t.mark_tuned(retune.baseline_rps)
@@ -119,25 +236,61 @@ class Runtime:
 
     def start(self) -> "Runtime":
         if self._thread is not None:
-            raise RuntimeError("runtime already started")
+            if self._thread.is_alive() and self._running:
+                raise RuntimeError("runtime already started")
+            if self._thread.is_alive():  # a failed stop(): still wedged
+                raise RuntimeError(
+                    "the previous stepper thread is still wedged inside an "
+                    "engine step; the runtime cannot restart until it exits")
+            self._thread = None  # wedged stop() whose thread has since died
         self._running = True
         self._stopped = False
-        self._thread = threading.Thread(target=self._loop,
+        self._gen += 1
+        self._thread = threading.Thread(target=self._loop, args=(self._gen,),
                                         name="repro-runtime-stepper",
                                         daemon=True)
         self._thread.start()
+        if self._watchdog_s is not None and self._watch_thread is None:
+            self._watch_stop.clear()
+            self._watch_thread = threading.Thread(
+                target=self._watch, name="repro-runtime-watchdog", daemon=True)
+            self._watch_thread.start()
         return self
 
     def stop(self, timeout: float = 30.0) -> None:
         """Stop the stepper.  Unfinished requests' futures fail with
         RuntimeError rather than hanging a later ``result()`` — call
-        :meth:`drain` first if the work should complete."""
+        :meth:`drain` first if the work should complete.
+
+        If the stepper thread fails to join within `timeout` (a wedged
+        engine step), stop() does NOT pretend it stopped: it warns, keeps
+        the thread handle for diagnosis (``start()`` then refuses until the
+        thread actually dies), and fails the unfinished futures with a
+        :class:`~repro.runtime.faults.WedgedError` so nothing hangs."""
         self._stopped = True
         self._running = False
         self._wake.set()
+        if self._watch_thread is not None:
+            self._watch_stop.set()
+            self._watch_thread.join(5.0)  # waits on an event; always joins
+            self._watch_thread = None
+        stop_err: BaseException = RuntimeError(
+            "runtime stopped with the request unfinished")
         if self._thread is not None:
             self._thread.join(timeout)
-            self._thread = None
+            if self._thread.is_alive():
+                stepping = self._stepping
+                where = f" inside engine {stepping[0]!r}.step()" \
+                    if stepping else ""
+                stop_err = flt.WedgedError(
+                    f"stop(timeout={timeout}) could not join the stepper "
+                    f"thread{where}; runtime left in wedged state for "
+                    "diagnosis", engine=stepping[0] if stepping else None)
+                self._error = stop_err
+                warnings.warn(str(stop_err), RuntimeWarning, stacklevel=2)
+                # keep self._thread: start() must refuse while it lives
+            else:
+                self._thread = None
         # Fail what's unfinished (their futures stay retrievable via
         # result(), which surfaces the error) and drop the stale request
         # bookkeeping: a later start() must not let an engine-completed OLD
@@ -146,10 +299,11 @@ class Runtime:
         with self._submit_lock:
             unfinished = [f for f in self._futures.values() if not f.done()]
         for fut in unfinished:
-            fut.set_exception(RuntimeError("runtime stopped with the "
-                                           "request unfinished"))
+            fut.set_exception(stop_err)
         self._pending.clear()
         self._gid_of.clear()
+        self._local_of.clear()
+        self._deadlines.clear()
 
     def __enter__(self) -> "Runtime":
         return self.start()
@@ -159,9 +313,17 @@ class Runtime:
 
     # -- submission / results ----------------------------------------------
 
-    def submit(self, engine: str, payload, **kwargs) -> int:
+    def submit(self, engine: str, payload, *, deadline_s: float | None = None,
+               **kwargs) -> int:
         """Enqueue a request for `engine`; returns a runtime-global id
         immediately (the stepper thread performs the actual engine.submit).
+
+        ``deadline_s`` arms a wall-clock budget from NOW: if no result
+        landed when it elapses, the future fails with
+        :class:`DeadlineExceededError` and the request's slot is reclaimed
+        via the engine's preemption-safe ``cancel``.  Submits can fail fast
+        with :class:`ShedError` (bounded pending queue full) or
+        :class:`EngineDeadError` (the engine was removed from service).
         """
         if engine not in self._engines:
             raise KeyError(f"unknown engine {engine!r}; registered: "
@@ -171,13 +333,28 @@ class Runtime:
         if self._stopped:
             raise RuntimeError("runtime is stopped; nothing would serve "
                                "this request")
+        if self._sup[engine].state == "dead":
+            raise flt.EngineDeadError(
+                f"engine {engine!r} was removed from service",
+                engine=engine) from self._sup[engine].last_error
+        if self._max_pending is not None and \
+                len(self._pending) >= self._max_pending:
+            # fail-fast overload shedding; shed requests never stamp the
+            # arrival estimator (they were not admitted)
+            self.telemetry[engine].shed += 1
+            raise flt.ShedError(
+                f"pending queue full ({self._max_pending}); request shed",
+                engine=engine)
+        now = self._clock()
         fut: Future = Future()
         with self._submit_lock:
             gid = self._next_gid
             self._next_gid += 1
             self._futures[gid] = fut
-            self.telemetry[engine].on_submit(self._clock())
-        self._pending.append((engine, gid, payload, kwargs))
+            if deadline_s is not None:
+                heapq.heappush(self._deadlines,
+                               (now + float(deadline_s), gid, engine))
+        self._pending.append((engine, gid, payload, kwargs, now))
         self._wake.set()
         # Close the race with a concurrently-dying or concurrently-stopping
         # stepper: if it drained/snapshotted _pending before our append,
@@ -210,10 +387,17 @@ class Runtime:
             self._futures.pop(gid, None)
         return out
 
-    def drain(self, timeout: float | None = None) -> list:
+    def drain(self, timeout: float | None = None, *,
+              return_exceptions: bool = False) -> list:
         """Block until every currently-outstanding request has completed;
         returns (and consumes, like :meth:`result`) their request objects in
-        submission (gid) order."""
+        submission (gid) order.
+
+        ``return_exceptions=True`` collects structured per-request failures
+        (deadline misses, faults on a dead engine, ...) into the returned
+        list instead of raising on the first one — the chaos-test shape:
+        under fault injection every future resolves to SOMETHING, and the
+        caller wants all of it."""
         deadline = None if timeout is None else time.monotonic() + timeout
         with self._submit_lock:  # snapshot: submit() mutates the dict
             gids = sorted(self._futures)
@@ -226,30 +410,141 @@ class Runtime:
                 out.append(self.result(gid, left))
             except KeyError:  # consumed by a concurrent result() call
                 continue
+            except TimeoutError:
+                raise
+            except Exception as e:
+                if not return_exceptions:
+                    raise
+                out.append(e)
         return out
 
     def stats(self) -> dict:
-        """Per-engine merged engine + telemetry snapshot."""
+        """Per-engine merged engine + telemetry + supervision snapshot."""
         with self._lock, self._submit_lock:
             now = self._clock()
             return {name: {**eng.stats(),
-                           "telemetry": self.telemetry[name].snapshot(now)}
+                           "telemetry": self.telemetry[name].snapshot(now),
+                           "supervision": self._sup_snapshot(name)}
                     for name, eng in self._engines.items()}
+
+    def _sup_snapshot(self, name: str) -> dict:
+        sup = self._sup[name]
+        return {"state": sup.state, "restarts": sup.restarts,
+                "last_error": None if sup.last_error is None
+                else repr(sup.last_error),
+                "events": list(sup.events)}
 
     # -- stepper thread ----------------------------------------------------
 
     def _ingest(self) -> None:
         while self._pending:
-            name, gid, payload, kwargs = self._pending.popleft()
+            name, gid, payload, kwargs, t_sub = self._pending.popleft()
+            fut = self._futures.get(gid)
+            if fut is None or fut.done():  # consumed / deadline-expired
+                continue
+            if self._sup[name].state == "dead":
+                fut.set_exception(flt.EngineDeadError(
+                    f"engine {name!r} was removed from service",
+                    engine=name))
+                continue
             try:
                 local = self._engines[name].submit(payload, **kwargs)
             except Exception as e:  # bad request: fail ITS future, keep serving
-                self._futures[gid].set_exception(e)
+                fut.set_exception(e)
                 continue
             self._gid_of[(name, local)] = gid
+            self._local_of[gid] = (name, local)
+            # Arrival telemetry stamps HERE, on successful ingest, with the
+            # request's submit timestamp — a rejected or shed request must
+            # not inflate the EWMA arrival rate into bogus re-tunes.
+            self.telemetry[name].on_submit(t_sub)
+
+    def _expire_deadlines(self, now: float) -> None:
+        """Fail (and preempt) every armed request whose budget elapsed."""
+        while self._deadlines and self._deadlines[0][0] <= now:
+            expiry, gid, name = heapq.heappop(self._deadlines)
+            fut = self._futures.get(gid)
+            if fut is None or fut.done():  # completed / consumed in time
+                continue
+            placed = self._local_of.pop(gid, None)
+            if placed is not None:
+                pname, local = placed
+                self._gid_of.pop((pname, local), None)
+                eng = self._engines[pname]
+                if self._sup[pname].state != "dead" and supports_cancel(eng):
+                    try:  # reclaim the slot; the future fails regardless
+                        eng.cancel(local)
+                    except Exception:
+                        pass
+            self.telemetry[name].deadline_misses += 1
+            fut.set_exception(flt.DeadlineExceededError(
+                f"request {gid} missed its deadline "
+                f"(expired {now - expiry:.3f}s ago)", engine=name))
+
+    def _service_quarantine(self, now: float) -> None:
+        """Attempt recovery of every quarantined engine whose backoff
+        expired: rebuild + replay via the engine's ``recover`` seam."""
+        for name, sup in self._sup.items():
+            if sup.state != "quarantined" or now < sup.until:
+                continue
+            try:
+                replayed = self._engines[name].recover()
+            except Exception as e:  # recovery itself failed: burn a restart
+                self._quarantine(name, e)
+                continue
+            sup.state = "serving"
+            sup.awaiting_completion = True
+            sup.log(self._clock(), f"recovered replay={replayed}")
+            t = self.telemetry[name]
+            t.recoveries += 1
+            t.replayed += int(replayed or 0)
+
+    def _quarantine(self, name: str, exc: BaseException) -> None:
+        """Route a fault: quarantine under the engine's FailurePolicy, or
+        kill it when the restart budget (or the recover seam) is missing."""
+        now = self._clock()
+        sup, pol = self._sup[name], self._failure[name]
+        sup.last_error = exc
+        sup.log(now, f"fault {getattr(exc, 'kind', type(exc).__name__)}")
+        self.telemetry[name].faults += 1
+        eng = self._engines[name]
+        if not supports_recover(eng) or sup.restarts >= pol.max_restarts:
+            self._kill(name, exc)
+            return
+        backoff = min(pol.backoff_initial_s * pol.backoff_factor
+                      ** sup.restarts, pol.backoff_max_s)
+        sup.restarts += 1
+        sup.state = "quarantined"
+        sup.until = now + backoff
+        sup.log(now, f"quarantined backoff={backoff:.3g}s")
+
+    def _kill(self, name: str, exc: BaseException) -> None:
+        """Remove `name` from service permanently and fail its futures."""
+        sup = self._sup[name]
+        sup.state = "dead"
+        sup.last_error = exc
+        sup.log(self._clock(), "dead")
+        err = flt.EngineDeadError(
+            f"engine {name!r} removed from service: {exc}", engine=name)
+        err.__cause__ = exc
+        self._fail_engine_futures(name, err)
+
+    def _fail_engine_futures(self, name: str, err: BaseException) -> None:
+        with self._submit_lock:
+            doomed = [(key, gid) for key, gid in self._gid_of.items()
+                      if key[0] == name]
+            for key, gid in doomed:
+                self._gid_of.pop(key, None)
+                self._local_of.pop(gid, None)
+        for _, gid in doomed:
+            fut = self._futures.get(gid)
+            if fut is not None and not fut.done():
+                fut.set_exception(err)
+        # still-pending (un-ingested) requests fail at the next _ingest
 
     def _pick(self) -> str | None:
-        busy = [n for n, e in self._engines.items() if e.in_flight > 0]
+        busy = [n for n, e in self._engines.items()
+                if self._sup[n].state == "serving" and e.in_flight > 0]
         if not busy:
             self._was_busy.clear()
             return None
@@ -265,11 +560,26 @@ class Runtime:
         self._vclock = self._vt[name]
         return name
 
-    def _step_one(self, name: str) -> None:
+    def _step_one(self, name: str, gen: int) -> None:
         eng = self._engines[name]
+        sup = self._sup[name]
         sweeps_before = getattr(eng, "sweeps_total", None)
         t0 = self._clock()
-        finished = eng.step()
+        # heartbeat: the watchdog sees (engine, t0) while step() runs; a
+        # wedge past watchdog_s triggers a takeover, after which THIS
+        # thread's generation is stale and it must unwind untouched
+        self._stepping = (name, t0)
+        try:
+            finished = eng.step()
+        except Exception as e:
+            self._stepping = None
+            if self._gen != gen:
+                raise _Takeover() from None
+            self._quarantine(name, e)
+            return
+        self._stepping = None
+        if self._gen != gen:
+            raise _Takeover() from None
         step_s = self._clock() - t0
         backlog = eng.in_flight + len(finished)
         self._vt[name] += step_cost_seconds(eng) / max(1, backlog)
@@ -279,29 +589,52 @@ class Runtime:
         # Wall-clock step-cost telemetry: sweeps executed this step (0 when
         # the engine was idle — those steps must not dilute the estimate).
         # The FIRST busy step of each program generation (fresh engine, or a
-        # resize() rebuild) pays JIT compilation — orders of magnitude above
-        # steady state — so it is excluded from the EWMA, or the measured
-        # re-tune cost basis would be poisoned for dozens of steps.
+        # resize()/recover() rebuild) pays JIT compilation — orders of
+        # magnitude above steady state — so it is excluded from the EWMA, or
+        # the measured re-tune cost basis would be poisoned for dozens of
+        # steps.
         units = 0 if sweeps_before is None else \
             max(0, getattr(eng, "sweeps_total", 0) - sweeps_before)
-        gen = getattr(eng, "resizes_total", 0)
-        if units > 0 and self._timed_gen.get(name) != gen:
-            self._timed_gen[name] = gen  # compile step: warm, don't record
+        prog_gen = (getattr(eng, "resizes_total", 0),
+                    getattr(eng, "recoveries_total", 0))
+        if units > 0 and self._timed_gen.get(name) != prog_gen:
+            self._timed_gen[name] = prog_gen  # compile step: warm, don't record
             units = 0
         t.on_step(busy, eng.in_flight, step_s=step_s, units=units)
         for req in finished:
             t.on_complete(getattr(req, "latency_s", 0.0) or 0.0)
             gid = self._gid_of.pop((name, req.id), None)
             fut = None if gid is None else self._futures.get(gid)
+            if gid is not None:
+                self._local_of.pop(gid, None)
             if fut is not None and not fut.done():
                 fut.set_result(req)
             # the future now owns the result; drop the engine's reference so
             # a long-running runtime doesn't accumulate every Request ever
             # served (engines keep their all-time counters regardless)
             getattr(eng, "completed", {}).pop(req.id, None)
+        if finished and sup.awaiting_completion:
+            sup.awaiting_completion = False
+            sup.log(self._clock(), "first_completion_after_recovery")
         self._steps_since_check[name] += 1
+        # cadenced corruption probe: silent non-finite state routes through
+        # the same quarantine/replay path as a loud step exception
+        pol = self._failure[name]
+        if pol.health_check_every > 0 and supports_health_check(eng):
+            sup.steps_since_probe += 1
+            if sup.steps_since_probe >= pol.health_check_every:
+                sup.steps_since_probe = 0
+                try:
+                    msg = eng.health_check()
+                except Exception as e:
+                    self._quarantine(name, e)
+                    return
+                if msg is not None:
+                    self._quarantine(name, flt.FaultError(msg, engine=name))
 
     def _maybe_retune(self, name: str) -> None:
+        if self._sup[name].state != "serving":
+            return
         policy = self._policies[name]
         if policy is None:
             return
@@ -309,8 +642,8 @@ class Runtime:
             return
         self._steps_since_check[name] = 0
         t = self.telemetry[name]
-        with self._submit_lock:  # estimator writes happen on submit()
-            rate = t.arrivals.rate(self._clock())
+        # estimator writes happen on this thread (_ingest), no lock needed
+        rate = t.arrivals.rate(self._clock())
         if t.tuned_rate is None:  # first check anchors the drift baseline
             if rate > 0:
                 t.mark_tuned(rate)
@@ -334,27 +667,88 @@ class Runtime:
             t.retunes += 1
         t.mark_tuned(rate)  # re-anchor either way; drift is vs the decision
 
-    def _loop(self) -> None:
+    def _loop(self, gen: int) -> None:
         try:
-            while self._running:
-                with self._lock:
+            while self._running and self._gen == gen:
+                lock = self._lock  # takeover swaps the attribute; pin per-pass
+                with lock:
+                    if self._gen != gen:
+                        return
+                    now = self._clock()
                     self._ingest()
+                    self._expire_deadlines(now)
+                    self._service_quarantine(now)
                     name = self._pick()
                     if name is not None:
-                        self._step_one(name)
+                        self._step_one(name, gen)
                         self._maybe_retune(name)
                 if name is None:
                     self._wake.wait(self._idle_sleep_s)
                     self._wake.clear()
+        except _Takeover:  # stale generation: a replacement stepper owns
+            return         # the runtime now; unwind without touching state
         except BaseException as e:  # fail every outstanding future loudly
+            if self._gen != gen:
+                return
             self._error = e
             for key, gid in list(self._gid_of.items()):
                 fut = self._futures.get(gid)
                 if fut is not None and not fut.done():
                     fut.set_exception(e)
             self._gid_of.clear()
+            self._local_of.clear()
             while self._pending:
-                _, gid, _, _ = self._pending.popleft()
+                _, gid, _, _, _ = self._pending.popleft()
                 fut = self._futures.get(gid)
                 if fut is not None and not fut.done():
                     fut.set_exception(e)
+
+    # -- watchdog thread ---------------------------------------------------
+
+    def _watch(self) -> None:
+        """Heartbeat monitor: declare a wedged step dead and hand the
+        healthy engines to a replacement stepper."""
+        interval = min(1.0, max(self._watchdog_s / 8.0, 0.01))
+        while not self._watch_stop.wait(interval):
+            snap = self._stepping
+            if snap is None:
+                continue
+            name, t0 = snap
+            if self._clock() - t0 >= self._watchdog_s:
+                self._declare_wedged(name, t0)
+
+    def _declare_wedged(self, name: str, t0: float) -> None:
+        with self._takeover_lock:
+            # re-check under the lock: the step may have completed (or a
+            # different step started) between the watchdog's read and here
+            snap = self._stepping
+            if (not self._running or snap is None or snap[0] != name
+                    or snap[1] != t0):
+                return
+            age = self._clock() - t0
+            # Abandon the wedged stepper: bump the generation (the stuck
+            # thread checks it right after step() returns and unwinds via
+            # _Takeover) and swap in a fresh lock — the old lock is held by
+            # the stuck thread, possibly forever.
+            self._gen += 1
+            self._lock = threading.Lock()
+            self._stepping = None
+            err = flt.WedgedError(
+                f"engine {name!r} step wedged for {age:.2f}s "
+                f"(watchdog_s={self._watchdog_s}); engine declared dead, "
+                "stepper replaced", engine=name)
+            sup = self._sup[name]
+            sup.state = "dead"
+            sup.last_error = err
+            sup.log(self._clock(), "wedged")
+            self.telemetry[name].faults += 1
+            self._fail_engine_futures(name, err)
+            # the wedged thread still holds the OLD lock; the replacement
+            # stepper serves the healthy engines behind the new one (it
+            # never touches the dead engine, the only object the stuck
+            # thread can still reach)
+            self._thread = threading.Thread(
+                target=self._loop, args=(self._gen,),
+                name="repro-runtime-stepper", daemon=True)
+            self._thread.start()
+            self._wake.set()

@@ -100,6 +100,12 @@ class EngineTelemetry:
     completed: int = 0
     steps: int = 0
     retunes: int = 0
+    # fault-tolerance counters (the supervisor updates these):
+    faults: int = 0  # quarantine entries (step exceptions + failed probes)
+    recoveries: int = 0  # successful rebuild + replay cycles
+    replayed: int = 0  # in-flight rows re-queued across those recoveries
+    deadline_misses: int = 0  # futures failed by submit(deadline_s=) expiry
+    shed: int = 0  # submissions refused by the bounded pending queue
     tuned_rate: float | None = None  # arrival estimate at the last (re)tune
     queue_depth: int = 0  # latest observed engine.in_flight
     utilization: float = 0.0  # EWMA of busy-slot fraction per step
@@ -159,6 +165,11 @@ class EngineTelemetry:
             "completed": self.completed,
             "steps": self.steps,
             "retunes": self.retunes,
+            "faults": self.faults,
+            "recoveries": self.recoveries,
+            "replayed": self.replayed,
+            "deadline_misses": self.deadline_misses,
+            "shed": self.shed,
             "queue_depth": self.queue_depth,
             "utilization": round(self.utilization, 4),
             "arrival_rate_rps": self.arrivals.rate(now),
