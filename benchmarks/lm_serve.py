@@ -1,0 +1,148 @@
+"""Paged-KV vs contiguous LM serving: structural cost of the KV cache.
+
+The same mixed-length greedy request set runs through two
+:class:`repro.runtime.LMEngine` instances — one on the contiguous
+``[layers, slots, max_len]`` cache (dense einsum reads the FULL row every
+token; one prefill dispatch PER TOKEN), one on the paged block-table pool
+(flash-decode gathers ``ceil(len/block)`` KV blocks; chunked prefill
+dispatches ``ceil(tokens/chunk)`` times).
+
+On one host CPU the interpret-mode Pallas kernel cannot win wall clock, so
+the numbers that transfer are STRUCTURAL and exact:
+
+  * ``prefill_dispatches``   — kernel launches to admit the request set;
+  * ``kv_bytes_per_decode``  — KV bytes gathered per decode dispatch
+    (counted by the engine from live lengths, not timed);
+  * ``modeled_step_s``       — the adSCH cost model's decode-step time,
+    which now prices the KV read term (``lm_decode``'s ``kv_block``);
+
+plus one sanity gate: both engines must emit IDENTICAL greedy token
+streams.  ``python -m benchmarks.lm_serve`` writes BENCH_lm.json at the
+repo root; ``run()`` feeds the shared bench.json harness.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from benchmarks.common import row
+from repro import runtime as rt
+from repro.configs.registry import ARCHS
+from repro.lm.paging import PagedConfig
+from repro.nn import transformer as T
+
+SLOTS = 4
+MAX_LEN = 48
+GEN = 12
+PROMPT_LENS = (3, 7, 12, 17, 24, 9)  # off/at block boundaries for bs=8
+BLOCK, CHUNK = 8, 8
+
+
+def _requests(cfg):
+    return [jax.random.randint(jax.random.PRNGKey(i + 1), (n,), 0, cfg.vocab)
+            for i, n in enumerate(PROMPT_LENS)]
+
+
+def _serve(eng, prompts) -> tuple[dict, float, dict]:
+    """Push the request set through one engine; returns (streams, wall,
+    stats)."""
+    # warm the compile caches outside the timed region
+    wid = eng.submit(prompts[0], max_new_tokens=2)
+    eng.drain()
+    eng.serve.prefill_dispatches = eng.serve.decode_dispatches = 0
+    eng.serve.kv_bytes_touched = 0
+    del wid
+    t0 = time.perf_counter()
+    ids = [eng.submit(p, max_new_tokens=GEN) for p in prompts]
+    done = {r.id: r.tokens for r in eng.drain()}
+    wall = time.perf_counter() - t0
+    return {i: done[rid] for i, rid in enumerate(ids)}, wall, eng.stats()
+
+
+def bench() -> dict:
+    cfg = ARCHS["llama3.2-3b"].smoke()
+    params, _ = T.init(jax.random.PRNGKey(0), cfg)
+    prompts = _requests(cfg)
+
+    cont = rt.LMEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                       decode_per_step=2)
+    c_streams, c_wall, c_stats = _serve(cont, prompts)
+
+    paged = rt.LMEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                        decode_per_step=2,
+                        paged=PagedConfig(block_size=BLOCK,
+                                          prefill_chunk=CHUNK))
+    p_streams, p_wall, p_stats = _serve(paged, prompts)
+
+    if p_streams != c_streams:
+        raise AssertionError("paged and contiguous greedy streams diverged")
+
+    def per_decode(stats):
+        return stats["kv_bytes_touched"] / max(stats["decode_dispatches"], 1)
+
+    c_kv, p_kv = per_decode(c_stats), per_decode(p_stats)
+    return {
+        "streams_equal": True,
+        "contiguous": {
+            "wall_s": round(c_wall, 4),
+            "prefill_dispatches": c_stats["prefill_dispatches"],
+            "decode_dispatches": c_stats["decode_dispatches"],
+            "kv_bytes_per_decode": int(c_kv),
+            "modeled_step_s": cont._step_cost,
+        },
+        "paged": {
+            "wall_s": round(p_wall, 4),
+            "prefill_dispatches": p_stats["prefill_dispatches"],
+            "decode_dispatches": p_stats["decode_dispatches"],
+            "kv_bytes_per_decode": int(p_kv),
+            "modeled_step_s": paged._step_cost,
+        },
+        "prefill_dispatch_ratio": round(
+            c_stats["prefill_dispatches"]
+            / max(p_stats["prefill_dispatches"], 1), 2),
+        "kv_bytes_per_decode_ratio": round(c_kv / max(p_kv, 1), 2),
+        "modeled_step_ratio": round(
+            cont._step_cost / max(paged._step_cost, 1e-12), 2),
+    }
+
+
+def run() -> list[dict]:
+    b = bench()
+    return [row(
+        "lm_serve",
+        f"paged_vs_contiguous(slots={SLOTS},max_len={MAX_LEN},"
+        f"block={BLOCK},gen={GEN})",
+        b["paged"]["wall_s"] * 1e6,
+        f"streams_equal={b['streams_equal']} "
+        f"prefill_dispatches={b['paged']['prefill_dispatches']}"
+        f"/{b['contiguous']['prefill_dispatches']} "
+        f"kv_bytes_per_decode_ratio={b['kv_bytes_per_decode_ratio']}x "
+        f"modeled_step_ratio={b['modeled_step_ratio']}x")]
+
+
+def main() -> None:
+    out = {
+        "workload": (f"{len(PROMPT_LENS)} greedy LM requests (prompts "
+                     f"{list(PROMPT_LENS)} tokens, {GEN} generated each) on "
+                     f"the llama3.2 smoke config, {SLOTS} slots, "
+                     f"max_len={MAX_LEN}: contiguous KV cache vs paged "
+                     f"block-table pool (block={BLOCK}, "
+                     f"prefill_chunk={CHUNK})"),
+        "timing_mode": ("CPU wall clock with the Pallas flash-decode kernel "
+                        "in interpret mode — NOT TPU-predictive; the "
+                        "dispatch counts, KV bytes per decode step and "
+                        "modeled adSCH step costs are the transferable "
+                        "signal"),
+        "result": bench(),
+    }
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_lm.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=1)
+    print(json.dumps(out, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -133,12 +133,19 @@ def lvrf_rows(key, *, cfg=None, rules=("constant", "progression_p1",
 
 
 def lm_stack_ops(cfg, tokens: int, tag: str, *, symbolic: bool,
-                 lm_head: bool) -> tuple:
+                 lm_head: bool, kv_window: int = 0) -> tuple:
     """adSCH cost hints for pushing ``tokens`` tokens through one LM stack.
 
     Coarse by design (layers folded into the GEMM row dim, attention scored
     as its projections): the scheduler only needs relative magnitudes to
     size the decode burst against the prefill window.
+
+    ``kv_window > 0`` adds the decode-attention KV read — the term that
+    actually dominates decode HBM traffic: every token reads ``kv_window``
+    cached positions per layer (contiguous: the full ``max_len`` row the
+    dense einsum touches; paged: ``ceil(len/block) * block`` — the block
+    gathers the flash-decode kernel issues).  Priced as a SIMD op (pure
+    data movement), with int8 caches reading half the elements of bf16.
     """
     d, L = cfg.d_model, cfg.n_layers
     hd = cfg.head_dim if cfg.head_dim is not None else d // cfg.n_heads
@@ -147,8 +154,17 @@ def lm_stack_ops(cfg, tokens: int, tag: str, *, symbolic: bool,
         Op(f"{tag}_qkv", "gemm",
            (tokens * L, d, (cfg.n_heads + 2 * cfg.n_kv_heads) * hd),
            symbolic=symbolic),
+    ]
+    attn_deps = (f"{tag}_qkv",)
+    if kv_window:
+        scale = 0.5 if cfg.kv_cache_dtype == "int8" else 1.0
+        elems = int(tokens * L * kv_window * cfg.n_kv_heads * hd * 2 * scale)
+        ops.append(Op(f"{tag}_kv_gather", "simd", (max(elems, 1),),
+                      deps=(f"{tag}_qkv",), symbolic=symbolic))
+        attn_deps = (f"{tag}_qkv", f"{tag}_kv_gather")
+    ops += [
         Op(f"{tag}_attn_out", "gemm", (tokens * L, cfg.n_heads * hd, d),
-           deps=(f"{tag}_qkv",), symbolic=symbolic),
+           deps=attn_deps, symbolic=symbolic),
         Op(f"{tag}_mlp_in", "gemm", (tokens * L, d, d_ff_in),
            deps=(f"{tag}_attn_out",), symbolic=symbolic),
         Op(f"{tag}_mlp_out", "gemm", (tokens * L, cfg.d_ff, d),
@@ -161,7 +177,9 @@ def lm_stack_ops(cfg, tokens: int, tag: str, *, symbolic: bool,
 
 
 @register("lm_decode")
-def lm_decode(key, *, cfg, batch: int = 4, prompt_len: int = 16) -> ServeSpec:
+def lm_decode(key, *, cfg, batch: int = 4, prompt_len: int = 16,
+              max_len: int | None = None,
+              kv_block: int | None = None) -> ServeSpec:
     """LM continuous batching as a registered workload.
 
     ``cfg`` is a :class:`repro.nn.transformer.ModelConfig`.  The StageGraph
@@ -175,19 +193,31 @@ def lm_decode(key, *, cfg, batch: int = 4, prompt_len: int = 16) -> ServeSpec:
     returns how many decode steps fit a prefill window — the burst
     :class:`repro.runtime.LMEngine` runs between retirement scans, the same
     slot accounting as the factorizer ``Engine``.
+
+    The decode stage now carries the KV-read term at the ``prompt_len``
+    operating point: contiguous caches read the full ``max_len`` row per
+    token (the dense einsum's traffic regardless of live length), paged
+    caches (``kv_block`` set) read ``ceil((prompt_len+1)/kv_block)`` block
+    gathers — so adSCH burst sizing and the Runtime's virtual-time fairness
+    see paged decode's real (smaller) cost.
     """
+    if kv_block is not None:
+        kv_window = -(-(prompt_len + 1) // kv_block) * kv_block
+    else:
+        kv_window = max_len if max_len is not None else prompt_len
     graph = StageGraph("lm_decode", (
         Stage("prefill", None, symbolic=False,
               cost_ops=lm_stack_ops(cfg, batch * prompt_len, "prefill",
                                     symbolic=False, lm_head=False)),
         Stage("decode", None, symbolic=True,
               cost_ops=lm_stack_ops(cfg, batch, "decode", symbolic=True,
-                                    lm_head=True)),
+                                    lm_head=True, kv_window=kv_window)),
     ))
 
     def step_ops(slots, *, data_shards=1, model_shards=1):
         del model_shards  # LM tensor parallelism is out of the cell model's scope
         return list(lm_stack_ops(cfg, -(-slots // data_shards), "decode",
-                                 symbolic=True, lm_head=True))
+                                 symbolic=True, lm_head=True,
+                                 kv_window=kv_window))
 
     return ServeSpec("lm_decode", graph=graph, step_ops=step_ops)

@@ -1,0 +1,137 @@
+"""Online-softmax paged flash-decode Pallas kernel.
+
+One decode step's attention for a batch of slots whose KV lives in a shared
+block pool, addressed through per-slot block tables (see ref.py for the
+layout contract).  The grid is ``(B, W)``: program ``(b, i)`` loads row
+``b``'s i-th logical KV block straight from the pool — the block table
+rides in as a scalar-prefetch operand, so the BlockSpec index_map
+``tab[b, i]`` turns the gather into the pipeline's own HBM->VMEM copy; no
+materialised [B, W*bs, ...] gather ever exists.
+
+Per tile the kernel keeps the flash-attention running statistics in VMEM
+scratch (persistent across the innermost grid axis): running max ``m``,
+running denominator ``l``, unnormalised accumulator ``acc``, rescaled by
+``exp(m_old - m_new)`` per tile.  The tail block is handled by masking
+positions ``>= kv_lens[b]`` to -1e30 (same sentinel as the dense paths);
+whole blocks past the live window are skipped under ``@pl.when`` — their
+HBM traffic is still issued by the pipeline (the copy is unconditional)
+but no FLOPs run, and table padding keeps the loads in-range.  With an
+int8 pool the per-(token, head) dequant scales ride in through the same
+block table and the dequant fuses into the tile load.
+
+Numerics: f32 throughout (matching attention_decode's f32 softmax).  The
+online rescaling reassociates the softmax sum across tiles, so outputs are
+equal to the dense reference only within a small f32 tolerance (~1e-5
+relative; documented in DESIGN.md) — the serving-level contract (greedy
+token streams bit-equal across block sizes) is asserted in
+tests/test_paging.py on top of this.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG = -1e30
+
+
+def _body(table_ref, lens_ref, q_ref, k_ref, v_ref, *rest, block_size: int,
+          quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_ref, l_ref, acc_ref = rest
+    else:
+        o_ref, m_ref, l_ref, acc_ref = rest
+    b, i = pl.program_id(0), pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    valid_n = lens_ref[b]
+    start = i * block_size
+
+    @pl.when(start < valid_n)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32)       # [G, rep, dh]
+        k = k_ref[0].astype(jnp.float32)       # [bs, G, dh]
+        v = v_ref[0].astype(jnp.float32)
+        if quantized:
+            k = k * ks_ref[0]                  # [bs, G, 1] broadcast
+            v = v * vs_ref[0]
+        # scores: batch over G, contract dh -> [G, rep, bs]
+        s = jax.lax.dot_general(q, k, (((2,), (2,)), ((0,), (1,))),
+                                preferred_element_type=jnp.float32)
+        pos = start + jax.lax.broadcasted_iota(jnp.int32, (1, 1, block_size), 2)
+        s = jnp.where(pos < valid_n, s, _NEG)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+        pv = jax.lax.dot_general(p, v, (((2,), (0,)), ((0,), (1,))),
+                                 preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+        m_ref[...] = m_new
+
+    @pl.when(i == pl.num_programs(1) - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...]
+                      / jnp.maximum(l_ref[...], 1e-30)[..., None])[None]
+
+
+def flash_decode(q, k_pool, v_pool, table, kv_lens, *, k_scale=None,
+                 v_scale=None, interpret: bool = False):
+    """Paged online-softmax decode attention (see ref.py for shapes).
+
+    Exactly one ``pallas_call`` per invocation — the jaxpr-checked serving
+    contract (tests/test_paging.py).
+    """
+    B, G, rep, dh = q.shape
+    W = table.shape[1]
+    bs = int(k_pool.shape[1])
+    quantized = k_pool.dtype == jnp.int8
+    if quantized and (k_scale is None or v_scale is None):
+        raise ValueError("int8 KV pool requires k_scale/v_scale pools")
+
+    def _kv_index(b, i, tab, ln):
+        # Clamp dead tiles (past the row's live window) to the LAST live
+        # block: consecutive grid steps with an unchanged block index make
+        # the pipeline skip the HBM->VMEM copy, so a row's KV traffic is
+        # ceil(len/bs) block gathers — the structural win the cost model
+        # prices — while @pl.when skips the compute.
+        live = jnp.maximum((ln[b] + bs - 1) // bs, 1)
+        return (tab[b, jnp.minimum(i, live - 1)], 0, 0, 0)
+
+    pool_spec = pl.BlockSpec((1, bs, G, dh), _kv_index)
+    in_specs = [
+        pl.BlockSpec((1, G, rep, dh), lambda b, i, tab, ln: (b, 0, 0, 0)),
+        pool_spec,
+        pool_spec,
+    ]
+    operands = [q.astype(jnp.float32), k_pool, v_pool]
+    if quantized:
+        scale_spec = pl.BlockSpec((1, bs, G, 1), _kv_index)
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scale, v_scale]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, W),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, rep, dh),
+                               lambda b, i, tab, ln: (b, 0, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((G, rep), jnp.float32),
+                        pltpu.VMEM((G, rep), jnp.float32),
+                        pltpu.VMEM((G, rep, dh), jnp.float32)],
+    )
+    return pl.pallas_call(
+        partial(_body, block_size=bs, quantized=quantized),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, G, rep, dh), jnp.float32),
+        interpret=interpret,
+    )(table, kv_lens, *operands)

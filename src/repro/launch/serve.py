@@ -5,6 +5,17 @@ serving as continuous batching: new requests are slotted into the fixed
 decode batch as old ones finish, so the heterogeneous prefill/decode kernels
 keep the array busy — the same utilization argument as Fig. 13b.
 
+Two device layouts behind one API:
+
+  * contiguous (default): one ``[periods, slots, max_len, ...]`` KV cache,
+    per-token prefill — the original path, kept for stateful block kinds
+    (mamba / xLSTM) the paged layout doesn't cover;
+  * paged (``paged=PagedConfig(...)``): a shared block pool + per-slot
+    block tables (:mod:`repro.lm.paging`), chunked prefill (one dispatch
+    per ``prefill_chunk`` tokens instead of one per token), flash-decode
+    attention (:mod:`repro.kernels.flash_decode`), capacity limited by the
+    pool instead of ``max_len``, and ``resize()`` as a block-table edit.
+
     PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-3b --smoke
 """
 from __future__ import annotations
@@ -17,26 +28,67 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.registry import ARCHS
+from repro.lm import model as lm_model
+from repro.lm import sampling as lm_sampling
+from repro.lm.paging import BlockTablePool, PagedConfig, cdiv
 from repro.nn import transformer as T
 
 
 class ServeEngine:
     """Static-batch continuous batching over a shared KV cache."""
 
-    def __init__(self, cfg, params, batch_slots: int, max_len: int):
+    def __init__(self, cfg, params, batch_slots: int, max_len: int,
+                 paged: PagedConfig | None = None):
+        if paged is not None and not isinstance(paged, PagedConfig):
+            # catch the natural misuse paged=True before it dies as an
+            # opaque AttributeError inside a jit trace (same guard as the
+            # resonator FusedConfig)
+            raise TypeError(
+                f"paged= expects a PagedConfig or None, got {paged!r}")
         self.cfg, self.params = cfg, params
         self.max_len = max_len
-        self.cache = T.init_cache(cfg, batch_slots, max_len)
         self.slots = batch_slots
+        self.paged = paged
         self.active = np.zeros(batch_slots, bool)
         self.generated: list = [[] for _ in range(batch_slots)]
         # Host mirror of each slot's KV length + capacity parking flags: a
-        # decode step writes KV at position len, so a slot at len == max_len
-        # must NOT step again — the dynamic_update_slice would silently clamp
-        # and corrupt the last cache position.  step() parks such slots
-        # (active=False, overflowed=True) instead.
+        # decode step writes KV at position len, so a slot out of KV room
+        # must NOT step again.  step() parks such slots (active=False,
+        # overflowed=True) instead.
         self.lens = np.zeros(batch_slots, np.int64)
         self.overflowed = np.zeros(batch_slots, bool)
+        # Per-slot sampling override (None = the step()-level sampler args,
+        # greedy by default); set by add_request(sampling=...).
+        self.sampling: list = [None] * batch_slots
+        # Structural serving metrics (interpret-mode wall time is not the
+        # signal; these are): dispatches and modeled KV bytes per decode.
+        self.prefill_dispatches = 0
+        self.decode_dispatches = 0
+        self.kv_bytes_touched = 0
+        if paged is not None:
+            lm_model.check_paging_supported(cfg)
+            nb = paged.resolve_num_blocks(batch_slots, max_len)
+            width = paged.resolve_table_width(batch_slots, max_len)
+            self.blocks = BlockTablePool(nb, paged.block_size, batch_slots,
+                                         width)
+            self.pool = lm_model.init_pool(cfg, nb, paged.block_size)
+            # The pool is donated through every dispatch (it is THE mutable
+            # serving state); closures carry no batch dim, so resize() is
+            # pure host-side re-slotting + an automatic shape recompile.
+            self._decode_paged = jax.jit(
+                lambda p, pool, table, lens, tok, act:
+                lm_model.decode_step_paged(
+                    p, cfg, pool, table, lens, tok, act,
+                    use_flash=paged.use_flash, interpret=paged.interpret),
+                donate_argnums=(1,))
+            self._prefill_paged = jax.jit(
+                lambda p, pool, row_table, len0, tok, count:
+                lm_model.prefill_chunk_paged(p, cfg, pool, row_table, len0,
+                                             tok, count),
+                donate_argnums=(1,))
+            return
+        self.cache = T.init_cache(cfg, batch_slots, max_len)
+
         # One decode step with the active-slot select fused into the jitted
         # program: inactive slots keep their old cache rows (their dummy
         # token must not advance the KV length a later add_request prefills
@@ -59,65 +111,230 @@ class ServeEngine:
         # Pristine per-slot state for slot reuse (xLSTM stabilizer rows init
         # to -1e9, so "reset" must slice from a fresh cache, not zero).
         self._fresh_cache = T.init_cache(cfg, batch_slots, max_len)
+        # Slot reset as ONE jitted dispatch with the stale cache donated:
+        # only the target row of each leaf is rewritten in place.  The old
+        # eager tree.map of `.at[:, slot].set` copied every full leaf per
+        # admission — O(cache), not O(row).
+        self._reset_slot = jax.jit(
+            lambda c, f, slot: jax.tree.map(
+                lambda cl, fl: cl.at[:, slot].set(jnp.take(fl, slot, axis=1)),
+                c, f),
+            donate_argnums=(0,))
 
-    def add_request(self, slot: int, prompt: jnp.ndarray):
-        """Prefill a prompt into one slot by streaming tokens (simple path).
+    # -- capacity ----------------------------------------------------------
 
-        The slot's cache row is reset first (slots are reused across
+    @property
+    def slot_capacity(self) -> int:
+        """Max tokens one slot can hold (cache row / block-table width)."""
+        if self.paged is None:
+            return self.max_len
+        return self.blocks.slot_capacity
+
+    def can_admit(self, tokens: int) -> bool:
+        """Whether a fresh ``tokens``-token prompt can be admitted NOW
+        (paged: enough free blocks; contiguous: fits the row)."""
+        if tokens > self.slot_capacity:
+            return False
+        if self.paged is None:
+            return True
+        return self.blocks.free_blocks >= cdiv(tokens, self.paged.block_size)
+
+    def _kv_step_bytes(self) -> int:
+        """Modeled KV bytes one decode dispatch reads (all attn layers)."""
+        cfg = self.cfg
+        G = cfg.n_kv_heads
+        dh = cfg.head_dim if cfg.head_dim is not None else \
+            cfg.d_model // cfg.n_heads
+        int8 = cfg.kv_cache_dtype == "int8"
+        per_tok = 2 * G * dh * (1 if int8 else 2) + (2 * G * 4 if int8 else 0)
+        n_attn = sum(k.startswith("attn") for k in cfg.block_pattern) \
+            * cfg.n_periods
+        if self.paged is None:
+            window = self.slots * self.max_len  # dense read of the full cache
+        elif self.paged.use_flash:
+            bs = self.paged.block_size  # ceil(len/bs) block gathers per row
+            window = sum(cdiv(int(l) + 1, bs) * bs for l in self.lens)
+        else:  # dense gathered reference reads each row's full table window
+            window = self.slots * self.blocks.table_width \
+                * self.paged.block_size
+        return window * per_tok * n_attn
+
+    # -- admission ---------------------------------------------------------
+
+    def release_slot(self, slot: int) -> None:
+        """Stop serving a slot and (paged) return its blocks to the pool."""
+        self.active[slot] = False
+        self.sampling[slot] = None
+        if self.paged is not None:
+            self.blocks.release(slot)
+
+    def add_request(self, slot: int, prompt: jnp.ndarray, sampling=None):
+        """Prefill a prompt into one slot.
+
+        The slot's prior state is released first (slots are reused across
         requests).  Only ``prompt[:-1]`` is prefilled; the last prompt token
         is seeded into ``generated`` so the next ``step()`` feeds it —
         writing its KV exactly once and producing the true first next-token
-        logits.  Returns the target slot's logits after the last *prefilled*
-        token (``None`` for prompts shorter than 2 tokens).
+        logits.  ``sampling`` (a :class:`repro.lm.sampling.SamplingSpec`)
+        overrides the engine-level sampler for this slot.  Returns the
+        target slot's logits after the last *prefilled* token (``None`` for
+        prompts shorter than 2 tokens).
         """
         if prompt.shape[0] == 0:  # nothing to serve; leave the slot parked
             return None
-        if prompt.shape[0] > self.max_len:
+        n = int(prompt.shape[0])
+        if n > self.slot_capacity:
             # prompt[:-1] prefills and the seeded last token still needs a KV
             # position on the first step(): len(prompt) rows of cache total
             raise ValueError(
-                f"prompt of {prompt.shape[0]} tokens exceeds the cache "
-                f"capacity max_len={self.max_len}")
-        self.cache = jax.tree.map(
-            lambda c, f: c.at[:, slot].set(f[:, slot]),
-            self.cache, self._fresh_cache)
+                f"prompt of {n} tokens exceeds the cache capacity "
+                f"{self.slot_capacity}"
+                + ("" if self.paged is not None else
+                   f" (max_len={self.max_len})"))
+        if sampling is not None and \
+                not isinstance(sampling, lm_sampling.SamplingSpec):
+            raise TypeError(f"sampling= expects a SamplingSpec or None, "
+                            f"got {sampling!r}")
         logits = None
-        for t in range(prompt.shape[0] - 1):
-            logits, self.cache = self._prefill(
-                self.params, self.cache, prompt[t], jnp.int32(slot))
+        if self.paged is not None:
+            self.blocks.release(slot)
+            if not self.blocks.ensure(slot, n):
+                self.blocks.release(slot)
+                raise RuntimeError(
+                    f"KV pool exhausted admitting a {n}-token prompt "
+                    f"(free blocks: {self.blocks.free_blocks} x "
+                    f"{self.paged.block_size}); gate admissions on "
+                    "can_admit()")
+            row_table = jnp.asarray(self.blocks.table()[slot])
+            C = self.paged.prefill_chunk
+            toks = np.asarray(prompt[:-1], np.int32)
+            for c0 in range(0, len(toks), C):
+                chunk = toks[c0:c0 + C]
+                count = len(chunk)
+                padded = np.zeros(C, np.int32)
+                padded[:count] = chunk
+                lg, self.pool = self._prefill_paged(
+                    self.params, self.pool, row_table, jnp.int32(c0),
+                    jnp.asarray(padded)[None], jnp.int32(count))
+                self.prefill_dispatches += 1
+                logits = lg[:, count - 1]
+        else:
+            self.cache = self._reset_slot(self.cache, self._fresh_cache,
+                                          jnp.int32(slot))
+            for t in range(n - 1):
+                lg, self.cache = self._prefill(
+                    self.params, self.cache, prompt[t], jnp.int32(slot))
+                self.prefill_dispatches += 1
+                logits = lg[slot]
         self.active[slot] = True
         self.generated[slot] = [int(prompt[-1])]
-        self.lens[slot] = prompt.shape[0] - 1
+        self.lens[slot] = n - 1
         self.overflowed[slot] = False
-        return None if logits is None else logits[slot]
+        self.sampling[slot] = sampling
+        return logits
+
+    # -- decode ------------------------------------------------------------
+
+    def _park_full(self) -> None:
+        """Park active slots that have no KV room for this step's write."""
+        if self.paged is None:
+            full = self.active & (self.lens >= self.max_len)
+            if full.any():
+                self.active[full] = False
+                self.overflowed[full] = True
+            return
+        # Pool-exhaustion parking: grow each slot's block list for one more
+        # position, in ascending slot order (deterministic under replay);
+        # a slot the pool cannot serve parks but KEEPS its blocks — the
+        # caller retires it and release_slot() returns them.
+        for s in range(self.slots):
+            if self.active[s] and \
+                    not self.blocks.ensure(s, int(self.lens[s]) + 1):
+                self.active[s] = False
+                self.overflowed[s] = True
 
     def step(self, sampler="greedy", temperature=1.0, key=None):
         """One decode step for the active slots; returns sampled tokens.
 
-        Slots whose cache is full are parked first (``active`` cleared,
-        ``overflowed`` set) — continuing to decode them would write KV past
-        ``max_len``.  Returns ``None`` when parking leaves nothing active.
+        Slots out of KV room are parked first (``active`` cleared,
+        ``overflowed`` set).  Returns ``None`` when parking leaves nothing
+        active.  ``sampler="categorical"`` requires an explicit ``key`` and
+        a positive ``temperature`` (validated here — both used to die as
+        opaque jax errors); per-slot :class:`SamplingSpec`s from
+        ``add_request`` override these engine-level args.
         """
-        full = self.active & (self.lens >= self.max_len)
-        if full.any():
-            self.active[full] = False
-            self.overflowed[full] = True
+        if sampler != "greedy":
+            if key is None:
+                raise ValueError(
+                    f"sampler={sampler!r} needs an explicit PRNG key "
+                    "(key=jax.random.PRNGKey(...)); only the greedy "
+                    "sampler is key-free")
+            if not temperature > 0:
+                raise ValueError(
+                    f"temperature must be > 0, got {temperature} — "
+                    "temperature=0 is greedy argmax; use sampler='greedy'")
+        self._park_full()
         if not self.active.any():
             return None
         last = jnp.asarray([
             self.generated[s][-1] if self.generated[s] else 0
             for s in range(self.slots)], dtype=jnp.int32)[:, None]
-        logits, self.cache = self._decode(self.params, self.cache, last,
-                                          jnp.asarray(self.active))
+        if self.paged is not None:
+            logits, self.pool = self._decode_paged(
+                self.params, self.pool, jnp.asarray(self.blocks.table()),
+                jnp.asarray(self.lens, jnp.int32), last,
+                jnp.asarray(self.active))
+        else:
+            logits, self.cache = self._decode(self.params, self.cache, last,
+                                              jnp.asarray(self.active))
+        self.decode_dispatches += 1
+        self.kv_bytes_touched += self._kv_step_bytes()
         self.lens[self.active] += 1
         if sampler == "greedy":
-            nxt = jnp.argmax(logits[:, -1], axis=-1)
+            nxt = np.array(jnp.argmax(logits[:, -1], axis=-1))
         else:
-            nxt = jax.random.categorical(key, logits[:, -1] / temperature)
+            nxt = np.array(jax.random.categorical(
+                key, logits[:, -1] / temperature))
         for s in range(self.slots):
-            if self.active[s]:
-                self.generated[s].append(int(nxt[s]))
-        return nxt
+            if not self.active[s]:
+                continue
+            if self.sampling[s] is not None:
+                nxt[s] = lm_sampling.sample_token(
+                    logits[s, -1], self.sampling[s], int(self.lens[s]))
+            self.generated[s].append(int(nxt[s]))
+        return jnp.asarray(nxt)
+
+    # -- warm handoff ------------------------------------------------------
+
+    def resize(self, slots: int, carry=()) -> None:
+        """Re-slot to ``slots`` rows, carrying ``carry`` old slots into new
+        rows 0.. in order — a pure block-table edit: carried slots' KV
+        blocks are untouched in the pool, so their decode trajectories are
+        bit-equal across the resize (the ``Engine.resize`` warm-handoff
+        contract).  Paged engines only; the contiguous cache would need a
+        buffer reshape (``LMEngine.resize`` replays instead)."""
+        if self.paged is None:
+            raise ValueError(
+                "resize() needs the paged KV path (paged=PagedConfig()); "
+                "the contiguous cache cannot re-slot without a reshape")
+        carry = list(carry)
+        if any(c < 0 or c >= self.slots for c in carry):
+            raise ValueError(f"carry={carry} outside 0..{self.slots - 1}")
+        self.blocks.resize(slots, carry)
+        self.active = np.array(
+            [self.active[c] for c in carry] + [False] * (slots - len(carry)),
+            bool)
+        self.lens = np.array(
+            [self.lens[c] for c in carry] + [0] * (slots - len(carry)),
+            np.int64)
+        self.overflowed = np.array(
+            [self.overflowed[c] for c in carry]
+            + [False] * (slots - len(carry)), bool)
+        self.generated = [self.generated[c] for c in carry] + \
+            [[] for _ in range(slots - len(carry))]
+        self.sampling = [self.sampling[c] for c in carry] + \
+            [None] * (slots - len(carry))
+        self.slots = slots
 
 
 def main():
@@ -127,6 +344,7 @@ def main():
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--paged", action="store_true")
     args = ap.parse_args()
     spec = ARCHS[args.arch]
     cfg = spec.smoke() if args.smoke else spec.full()
@@ -134,7 +352,8 @@ def main():
     params, _ = T.init(key, cfg)
     print(f"{cfg.name}: {T.param_count(params):,} params; "
           f"serving batch={args.batch}")
-    eng = ServeEngine(cfg, params, args.batch, args.prompt_len + args.gen + 1)
+    eng = ServeEngine(cfg, params, args.batch, args.prompt_len + args.gen + 1,
+                      paged=PagedConfig() if args.paged else None)
     prompt = jax.random.randint(key, (args.prompt_len,), 0, cfg.vocab)
     t0 = time.perf_counter()
     for s in range(args.batch):
@@ -143,10 +362,11 @@ def main():
     t0 = time.perf_counter()
     for _ in range(args.gen):
         eng.step()
-    jax.block_until_ready(eng.cache)
+    jax.block_until_ready(eng.pool if args.paged else eng.cache)
     dec_t = time.perf_counter() - t0
     tps = args.batch * args.gen / dec_t
-    print(f"prefill {prefill_t*1e3:.1f}ms; decode {args.gen} steps x {args.batch} "
+    print(f"prefill {prefill_t*1e3:.1f}ms ({eng.prefill_dispatches} "
+          f"dispatches); decode {args.gen} steps x {args.batch} "
           f"slots in {dec_t*1e3:.1f}ms -> {tps:.1f} tok/s")
     print("sample:", eng.generated[0][:16])
 

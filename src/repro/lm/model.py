@@ -1,0 +1,129 @@
+"""Paged transformer entry points: decode + chunked prefill over a KV pool.
+
+Mirrors :func:`repro.nn.transformer.decode_step`'s scan-over-periods
+assembly but threads the stacked KV *pool* (shared physical blocks) plus a
+block ``table``/``kv_lens`` pair instead of a per-row contiguous cache.
+Two entry points:
+
+  * :func:`decode_step_paged` — one token for every slot; KV writes land at
+    ``table[row, len // bs]`` (trash block for inactive rows), attention
+    runs through the paged flash-decode kernel;
+  * :func:`prefill_chunk_paged` — a static-width prompt chunk for ONE slot:
+    one dispatch per chunk instead of one per token, causally masked per
+    query so the emitted logits equal the token-by-token path.
+
+Paging is supported for attention-only stacks (any MLP/MoE ffn half);
+stateful-block patterns (mamba / xLSTM / cross-attention / encoders) keep
+the contiguous path — :func:`check_paging_supported` rejects them with the
+reason rather than mis-serving.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers as L
+from repro.nn import moe as Moe
+from repro.nn import transformer as T
+
+
+def paging_unsupported_reason(cfg) -> str | None:
+    """None when ``cfg`` can serve paged, else a human-readable reason."""
+    bad = [k for k in cfg.block_pattern
+           if not k.startswith("attn") or "cross" in k]
+    if bad:
+        return (f"paged serving needs attention-only block patterns, got "
+                f"{cfg.block_pattern} (unsupported: {bad})")
+    if cfg.encoder is not None:
+        return "encoder-decoder (whisper) stacks are not paged"
+    if cfg.mrope_sections is not None:
+        return "M-RoPE (multi-stream positions) is not paged"
+    if cfg.vision_patches:
+        return "vision-prefix stacks are not paged"
+    return None
+
+
+def check_paging_supported(cfg) -> None:
+    reason = paging_unsupported_reason(cfg)
+    if reason is not None:
+        raise ValueError(reason)
+
+
+def init_pool(cfg, num_blocks: int, block_size: int):
+    """Stacked per-period pools mirroring :func:`transformer.init_cache`:
+    every leaf is ``[P, num_blocks + 1, block_size, ...]`` (the +1 is the
+    per-layer trash block)."""
+    check_paging_supported(cfg)
+    dtype = jnp.int8 if cfg.kv_cache_dtype == "int8" else jnp.bfloat16
+    per = [{"self": L.init_kv_pool(num_blocks, block_size, cfg.attn_cfg(),
+                                   dtype)}
+           for _ in cfg.block_pattern]
+    return jax.tree.map(
+        lambda leaf: jnp.broadcast_to(
+            leaf[None], (cfg.n_periods,) + leaf.shape).copy()
+        if cfg.n_periods > 1 else leaf[None],
+        per)
+
+
+def _ffn_half(p, kind: str, cfg, x):
+    h = T._norm(cfg, p["ln2"], x)
+    if kind.endswith("moe"):
+        m, _ = Moe.moe(p["moe"], h, cfg.moe)
+    elif cfg.mlp_kind == "swiglu":
+        m = L.swiglu(p["mlp"], h)
+    else:
+        m = L.gelu_mlp(p["mlp"], h)
+    return x + m
+
+
+def decode_step_paged(params, cfg, pool, table, kv_lens, tokens, active, *,
+                      use_flash: bool = True, interpret: bool | None = None):
+    """One decode step. tokens [B, 1]; table [B, W] int32; kv_lens [B]
+    int32 pre-write lengths; active [B] bool.  Returns (logits [B, 1, V]
+    f32, new_pool)."""
+    x = T._embed(params, cfg, tokens)
+
+    def period_body(x, scanned):
+        pp, pc = scanned
+        new = []
+        for bi, kind in enumerate(cfg.block_pattern):
+            h = T._norm(cfg, pp[bi]["ln1"], x)
+            a, new_self = L.attention_decode_paged(
+                pp[bi]["attn"], h, pc[bi]["self"], cfg.attn_cfg(), table,
+                kv_lens, active, use_flash=use_flash, interpret=interpret)
+            x = _ffn_half(pp[bi], kind, cfg, x + a)
+            new.append({**pc[bi], "self": new_self})
+        return x, new
+
+    x, new_pool = T._scan_with_cache(period_body, x, params["blocks"], pool,
+                                     cfg)
+    x = T._norm(cfg, params["final_ln"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(cfg.activ_dtype)).astype(jnp.float32)
+    return logits, new_pool
+
+
+def prefill_chunk_paged(params, cfg, pool, row_table, len0, tokens, count):
+    """Prefill one static-width chunk for one slot.  tokens [1, C] (first
+    ``count`` real, tail padded); row_table [W] int32; len0 scalar int32.
+    Returns (logits [1, C, V] f32, new_pool)."""
+    x = T._embed(params, cfg, tokens)
+
+    def period_body(x, scanned):
+        pp, pc = scanned
+        new = []
+        for bi, kind in enumerate(cfg.block_pattern):
+            h = T._norm(cfg, pp[bi]["ln1"], x)
+            a, new_self = L.attention_prefill_paged(
+                pp[bi]["attn"], h, pc[bi]["self"], cfg.attn_cfg(), row_table,
+                len0, count)
+            x = _ffn_half(pp[bi], kind, cfg, x + a)
+            new.append({**pc[bi], "self": new_self})
+        return x, new
+
+    x, new_pool = T._scan_with_cache(period_body, x, params["blocks"], pool,
+                                     cfg)
+    x = T._norm(cfg, params["final_ln"], x)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = (x @ head.astype(cfg.activ_dtype)).astype(jnp.float32)
+    return logits, new_pool

@@ -285,6 +285,116 @@ def init_kv_cache(batch: int, max_len: int, cfg: AttnConfig, dtype=jnp.bfloat16)
 
 
 # ---------------------------------------------------------------------------
+# Paged KV attention (block-table pool; see repro.lm.paging)
+# ---------------------------------------------------------------------------
+
+def init_kv_pool(num_blocks: int, block_size: int, cfg: AttnConfig,
+                 dtype=jnp.bfloat16):
+    """Shared KV block pool: ``num_blocks`` live blocks plus ONE trash block
+    at physical index ``num_blocks`` — KV writes for inactive rows and
+    padded prefill tokens scatter there instead of needing a where-merge
+    over the whole pool.  Blocks are reused without zeroing: the per-row
+    ``kv_lens`` masks make stale positions unreachable."""
+    G, dh = cfg.n_kv_heads, cfg.dh
+    nbp = num_blocks + 1
+    pool = {"k": jnp.zeros((nbp, block_size, G, dh), dtype),
+            "v": jnp.zeros((nbp, block_size, G, dh), dtype)}
+    if dtype == jnp.int8:
+        pool["k_scale"] = jnp.zeros((nbp, block_size, G, 1), jnp.float32)
+        pool["v_scale"] = jnp.zeros((nbp, block_size, G, 1), jnp.float32)
+    return pool
+
+
+def _pool_write(pool: dict, phys, off, k_new, v_new):
+    """Scatter one token per row into the pool at (phys[r], off[r]).
+    k_new/v_new: [R, G, dh] (one token per row, any leading row count)."""
+    quantized = pool["k"].dtype == jnp.int8
+    new_pool = dict(pool)
+    if quantized:
+        kq, ks = _quant_kv(k_new)
+        vq, vs = _quant_kv(v_new)
+        for name, val in (("k", kq), ("v", vq), ("k_scale", ks),
+                          ("v_scale", vs)):
+            new_pool[name] = pool[name].at[phys, off].set(
+                val.astype(pool[name].dtype))
+    else:
+        for name, val in (("k", k_new), ("v", v_new)):
+            new_pool[name] = pool[name].at[phys, off].set(
+                val.astype(pool[name].dtype))
+    return new_pool
+
+
+def attention_decode_paged(p, x, pool: dict, cfg: AttnConfig, table, kv_lens,
+                           active, *, use_flash: bool = True,
+                           interpret: bool | None = None) -> tuple:
+    """Single-token decode against a paged KV pool.
+
+    x: [B, 1, d]; pool: {'k','v': [NBP, bs, G, dh]} (+ scales when int8);
+    table: [B, W] int32 block table; kv_lens: [B] int32 pre-write lengths;
+    active: [B] bool — inactive rows write their KV to the trash block (and
+    their output is garbage the caller ignores).  Returns (out, new_pool).
+    """
+    from repro.kernels.flash_decode import ops as _fd
+
+    B = x.shape[0]
+    q, k_new, v_new = _qkv(p, x, cfg, kv_lens[:, None])
+    bs = pool["k"].shape[1]
+    trash = pool["k"].shape[0] - 1
+    W = table.shape[1]
+    rows = jnp.arange(B)
+    blk = jnp.minimum(kv_lens // bs, W - 1)
+    phys = jnp.where(active, table[rows, blk], trash)
+    off = kv_lens % bs
+    new_pool = _pool_write(pool, phys, off, k_new[:, 0], v_new[:, 0])
+    G = pool["k"].shape[2]
+    rep = cfg.n_heads // G
+    qf = (q.astype(jnp.float32) * cfg.dh ** -0.5).reshape(B, G, rep, cfg.dh)
+    out = _fd.flash_decode(qf, new_pool, table, kv_lens + 1,
+                           use_flash=use_flash, interpret=interpret)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.dh).astype(x.dtype)
+    return shard(dense(p["o"], out), "batch", None, "embed_act"), new_pool
+
+
+def attention_prefill_paged(p, x, pool: dict, cfg: AttnConfig, row_table,
+                            len0, count) -> tuple:
+    """Chunked prefill for ONE slot against the paged pool.
+
+    x: [1, C, d] — a static-width chunk whose first ``count`` tokens are
+    real (the tail is padding whose KV scatters to the trash block);
+    row_table: [W] int32; len0: scalar int32 KV length before the chunk.
+    Causal masking is per query position (kv pos <= len0 + i), so one
+    dispatch replaces C single-token decode dispatches with identical
+    logits.  Returns (out [1, C, d], new_pool).
+    """
+    C = x.shape[1]
+    idx = len0 + jnp.arange(C)                       # absolute positions [C]
+    q, k_new, v_new = _qkv(p, x, cfg, idx[None])
+    bs = pool["k"].shape[1]
+    trash = pool["k"].shape[0] - 1
+    W = row_table.shape[0]
+    within = jnp.arange(C) < count
+    phys = jnp.where(within, row_table[jnp.minimum(idx // bs, W - 1)], trash)
+    new_pool = _pool_write(pool, phys, idx % bs, k_new[0], v_new[0])
+    k = new_pool["k"][row_table].astype(jnp.float32)  # [W, bs, G, dh]
+    v = new_pool["v"][row_table].astype(jnp.float32)
+    if "k_scale" in new_pool:
+        k = k * new_pool["k_scale"][row_table]
+        v = v * new_pool["v_scale"][row_table]
+    G, dh = k.shape[2], k.shape[3]
+    k = k.reshape(W * bs, G, dh)
+    v = v.reshape(W * bs, G, dh)
+    rep = cfg.n_heads // G
+    qf = (q.astype(jnp.float32) * cfg.dh ** -0.5).reshape(1, C, G, rep, dh)
+    s = jnp.einsum("bcgrd,kgd->bcgrk", qf, k)
+    valid = jnp.arange(W * bs)[None, :] <= idx[:, None]  # [C, W*bs]
+    s = jnp.where(valid[None, :, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bcgrk,kgd->bcgrd", w, v)
+    out = out.reshape(1, C, cfg.n_heads * cfg.dh).astype(x.dtype)
+    return shard(dense(p["o"], out), "batch", "seq", "embed_act"), new_pool
+
+
+# ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
 

@@ -8,6 +8,16 @@ queueing, slot ownership, burst-scan retirement, per-request latency
 accounting — so one :class:`repro.runtime.Runtime` can interleave LM decode
 with symbolic factorization engines.
 
+With ``paged=PagedConfig(...)`` (or ``REPRO_LM_PAGED=1`` in the
+environment) the device layer serves from the block-table KV pool
+(:mod:`repro.lm.paging`): chunked prefill, flash-decode attention, and —
+the piece the contiguous layout could never offer — :meth:`resize` as a
+block-table edit, so the Runtime's EWMA re-tuner warm-hands-off the LM
+engine exactly like the factorizer engines (in-flight slots carried
+bit-equal).  On the contiguous layout :meth:`resize` still exists but
+replays: live requests re-queue from their pinned prompts (deterministic
+decode makes the replayed tokens bit-equal, the ``recover()`` argument).
+
 The adSCH connection runs through the registered ``lm_decode`` spec
 (:mod:`repro.engine.pipelines`): its StageGraph declares prefill as the
 neural block and per-token decode as the sliver-filling stream, and its
@@ -26,6 +36,7 @@ layer's KV-capacity guard retires with ``truncated=True``.
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
 from collections import deque
 from typing import Any
@@ -38,6 +49,8 @@ from repro.engine import registry
 from repro.engine.engine import (derive_sweeps_per_step, rolling_latency_ms,
                                  step_unit_ops)
 from repro.launch.serve import ServeEngine
+from repro.lm.paging import PagedConfig
+from repro.lm.sampling import SamplingSpec
 
 
 @dataclasses.dataclass
@@ -49,6 +62,7 @@ class LMRequest:
     max_new_tokens: int
     meta: Any
     submit_time: float
+    sampling: SamplingSpec | None = None  # None = greedy
     tokens: list = dataclasses.field(default_factory=list)  # generated ids
     result: Any = None  # {"tokens": ..., "text_len": ...} convenience dict
     truncated: bool = False  # KV capacity parked the slot before a stop
@@ -60,6 +74,16 @@ class LMRequest:
             self.done_time - self.submit_time
 
 
+def _resolve_paged(paged) -> PagedConfig | None:
+    if paged is None:
+        return PagedConfig() if os.environ.get("REPRO_LM_PAGED") else None
+    if paged is True:
+        return PagedConfig()
+    if paged is False:
+        return None
+    return paged  # ServeEngine type-checks the PagedConfig
+
+
 class LMEngine:
     """``submit()/step()/drain()`` continuous batching over ``ServeEngine``.
 
@@ -69,16 +93,19 @@ class LMEngine:
 
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 128,
                  prompt_len_hint: int = 16, decode_per_step: int | None = None,
-                 eos_id: int | None = None, hw=hw_model.COGSYS):
+                 eos_id: int | None = None, paged=None, hw=hw_model.COGSYS):
         self.cfg, self.hw = cfg, hw
         self.slots = slots
         self.eos_id = eos_id
-        self.spec = registry.build("lm_decode", None, cfg=cfg, batch=slots,
-                                   prompt_len=prompt_len_hint)
+        self.paged = _resolve_paged(paged)
+        self._prompt_len_hint = prompt_len_hint
+        self._dps_pinned = decode_per_step is not None
         # kept for fault recovery: recover() rebuilds the device layer from
         # these (params are read-only serving state, never mutated by decode)
         self._params, self._max_len = params, max_len
-        self.serve = ServeEngine(cfg, params, slots, max_len)
+        self.serve = ServeEngine(cfg, params, slots, max_len,
+                                 paged=self.paged)
+        self.spec = self._build_spec(slots)
         self.decode_per_step = (
             derive_sweeps_per_step(self.spec, slots, hw)
             if decode_per_step is None else decode_per_step)
@@ -90,26 +117,42 @@ class LMEngine:
         self.steps_total = 0
         self.tokens_total = 0
         self.recoveries_total = 0
+        self.resizes_total = 0
         self._lat_window: list = []
-        ops = step_unit_ops(self.spec, slots)
-        self._step_cost = self.decode_per_step * (
-            sch.schedule(ops, hw).makespan / hw.freq_hz)
+        self._step_cost = self._modeled_step_cost()
+
+    def _build_spec(self, slots: int):
+        return registry.build(
+            "lm_decode", None, cfg=self.cfg, batch=slots,
+            prompt_len=self._prompt_len_hint, max_len=self._max_len,
+            kv_block=None if self.paged is None else self.paged.block_size)
+
+    def _modeled_step_cost(self) -> float:
+        ops = step_unit_ops(self.spec, self.slots)
+        return self.decode_per_step * (
+            sch.schedule(ops, self.hw).makespan / self.hw.freq_hz)
 
     # -- request intake ----------------------------------------------------
 
-    def submit(self, prompt, *, max_new_tokens: int = 32, meta=None) -> int:
+    def submit(self, prompt, *, max_new_tokens: int = 32, meta=None,
+               sampling: SamplingSpec | None = None) -> int:
         """Enqueue one prompt; returns the request id.  Prompts that cannot
-        fit the KV cache at all are rejected here (the per-token capacity
-        guard then parks slots that fill up mid-generation)."""
+        fit the KV capacity at all are rejected here (the per-token guard
+        then parks slots that fill up mid-generation).  ``sampling`` picks
+        temperature/top-k decoding for this request (None = greedy); the
+        per-request seed makes replay after recover/resize bit-equal."""
         prompt = jnp.asarray(prompt, jnp.int32)
         if prompt.ndim != 1 or prompt.shape[0] == 0:
             raise ValueError("submit expects a non-empty 1-D token prompt")
-        if prompt.shape[0] > self.serve.max_len:
+        if prompt.shape[0] > self.serve.slot_capacity:
             raise ValueError(
                 f"prompt of {prompt.shape[0]} tokens exceeds the engine's "
-                f"KV capacity max_len={self.serve.max_len}")
+                f"KV capacity {self.serve.slot_capacity}")
+        if sampling is not None and not isinstance(sampling, SamplingSpec):
+            raise TypeError(
+                f"sampling= expects a SamplingSpec or None, got {sampling!r}")
         req = LMRequest(self._next_id, prompt, int(max_new_tokens), meta,
-                        time.perf_counter())
+                        time.perf_counter(), sampling=sampling)
         self._next_id += 1
         self._queue.append(req)
         return req.id
@@ -120,9 +163,13 @@ class LMEngine:
         for slot in range(self.slots):
             if self._owner[slot] is not None or not self._queue:
                 continue
+            # paged: a drained pool defers admission (FIFO order preserved)
+            # until retiring slots release blocks — parking, not rejection
+            if not self.serve.can_admit(int(self._queue[0].prompt.shape[0])):
+                break
             req = self._queue.popleft()
             self._owner[slot] = req
-            self.serve.add_request(slot, req.prompt)
+            self.serve.add_request(slot, req.prompt, sampling=req.sampling)
 
     def _stop_at(self, req: LMRequest, produced: list) -> int | None:
         """Index (exclusive) to trim `produced` at, or None if not done."""
@@ -152,7 +199,7 @@ class LMEngine:
             self.completed_total += 1
             self._lat_window.append(req.latency_s)
             self._owner[slot] = None
-            self.serve.active[slot] = False
+            self.serve.release_slot(slot)  # paged: blocks back to the pool
             finished.append(req)
         return finished
 
@@ -178,6 +225,48 @@ class LMEngine:
             raise RuntimeError("drain() exceeded max_steps")
         return sorted(out, key=lambda r: r.id)
 
+    # -- warm handoff ------------------------------------------------------
+
+    def resize(self, new_slots: int) -> None:
+        """Re-tune the slot count mid-run (the Runtime's EWMA re-tuner calls
+        this through the same ``Engine.resize`` contract as the factorizer
+        engines).
+
+        Paged: a block-table edit — the first ``new_slots`` live requests
+        keep their physical KV blocks and host state verbatim (bit-equal
+        trajectories across the resize); displaced live requests re-queue
+        at the FRONT in slot order and replay from their pinned prompts.
+        Contiguous: the cache cannot re-slot without a reshape, so EVERY
+        live request replays (deterministic greedy / seeded sampling makes
+        the regenerated tokens bit-equal — the ``recover()`` argument).
+        """
+        if new_slots < 1:
+            raise ValueError(f"resize needs >= 1 slot, got {new_slots}")
+        if new_slots == self.slots:
+            return
+        live = [(s, self._owner[s]) for s in range(self.slots)
+                if self._owner[s] is not None]
+        if self.paged is not None:
+            keep, overflow = live[:new_slots], live[new_slots:]
+            for _, req in reversed(overflow):
+                self._queue.appendleft(req)
+            self.serve.resize(new_slots, [s for s, _ in keep])
+            self._owner = [req for _, req in keep] + \
+                [None] * (new_slots - len(keep))
+        else:
+            for _, req in reversed(live):
+                self._queue.appendleft(req)
+            self.serve = ServeEngine(self.cfg, self._params, new_slots,
+                                     self._max_len)
+            self._owner = [None] * new_slots
+        self.slots = new_slots
+        self.spec = self._build_spec(new_slots)
+        if not self._dps_pinned:
+            self.decode_per_step = derive_sweeps_per_step(
+                self.spec, new_slots, self.hw)
+        self._step_cost = self._modeled_step_cost()
+        self.resizes_total += 1
+
     # -- fault tolerance ---------------------------------------------------
 
     def recover(self) -> int:
@@ -185,9 +274,10 @@ class LMEngine:
         generations; returns the number of replayed requests.
 
         A fresh :class:`ServeEngine` replaces the (possibly corrupt) KV
-        cache and slot bookkeeping; live requests re-queue at the FRONT in
+        state and slot bookkeeping; live requests re-queue at the FRONT in
         submission order and re-run prefill + decode from their pinned
-        prompts.  Greedy decode is deterministic, so a replayed request's
+        prompts.  Greedy decode is deterministic and sampled requests
+        re-derive their keys from (seed, position), so a replayed request's
         tokens are bit-equal to a fault-free run — partially generated
         tokens are simply regenerated (``_retire`` reads the device layer's
         ``generated``, which the rebuild reset).
@@ -196,15 +286,15 @@ class LMEngine:
         for req in reversed(live):
             self._queue.appendleft(req)
         self.serve = ServeEngine(self.cfg, self._params, self.slots,
-                                 self._max_len)
+                                 self._max_len, paged=self.paged)
         self._owner = [None] * self.slots
         self.recoveries_total += 1
         return len(live)
 
     def cancel(self, request_id: int) -> bool:
         """Preempt one request: drop it from the queue or free its slot
-        (the device layer's ``active`` mask stops decoding it — the same
-        parking ``_retire`` uses).  Returns whether anything was reclaimed.
+        (the device layer stops decoding it and, when paged, returns its
+        KV blocks to the pool).  Returns whether anything was reclaimed.
         """
         for i, req in enumerate(self._queue):
             if req.id == request_id:
@@ -213,7 +303,7 @@ class LMEngine:
         for slot, req in enumerate(self._owner):
             if req is not None and req.id == request_id:
                 self._owner[slot] = None
-                self.serve.active[slot] = False
+                self.serve.release_slot(slot)
                 return True
         return False
 
@@ -231,10 +321,15 @@ class LMEngine:
         return {
             "slots": self.slots,
             "decode_per_step": self.decode_per_step,
+            "paged": self.paged is not None,
             "steps": self.steps_total,
             "completed": self.completed_total,
             "tokens_total": self.tokens_total,
             "recoveries": self.recoveries_total,
+            "resizes": self.resizes_total,
+            "prefill_dispatches": self.serve.prefill_dispatches,
+            "decode_dispatches": self.serve.decode_dispatches,
+            "kv_bytes_touched": self.serve.kv_bytes_touched,
             "window_completed": len(lats),
             **rolling_latency_ms(lats),
         }

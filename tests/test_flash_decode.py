@@ -1,0 +1,133 @@
+"""Paged flash-decode kernel parity: online-softmax Pallas kernel vs the
+dense gathered reference vs the plain `attention_decode` softmax math, at
+every block-boundary case, in bf16 and int8."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_decode import ops as fd
+
+B, G, REP, DH = 3, 2, 2, 16
+
+
+def _quant(t):
+    amax = jnp.max(jnp.abs(t), axis=-1, keepdims=True)
+    scale = amax.astype(jnp.float32) / 127.0 + 1e-9
+    q = jnp.clip(jnp.round(t / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _setup(bs, width, kv_dtype, seed=0):
+    """Random pool + a table mapping each row to `width` distinct blocks."""
+    nbp = B * width + 1  # + trash block
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, G, REP, DH), jnp.float32)
+    kf = jax.random.normal(ks[1], (nbp, bs, G, DH), jnp.float32)
+    vf = jax.random.normal(ks[2], (nbp, bs, G, DH), jnp.float32)
+    if kv_dtype == "int8":
+        kq, ksc = _quant(kf)
+        vq, vsc = _quant(vf)
+        pool = {"k": kq, "v": vq, "k_scale": ksc, "v_scale": vsc}
+        kd, vd = kq.astype(jnp.float32) * ksc, vq.astype(jnp.float32) * vsc
+    else:
+        pool = {"k": kf.astype(jnp.bfloat16), "v": vf.astype(jnp.bfloat16)}
+        kd = pool["k"].astype(jnp.float32)
+        vd = pool["v"].astype(jnp.float32)
+    table = jnp.arange(B * width, dtype=jnp.int32).reshape(B, width)
+    return q, pool, table, kd, vd
+
+
+def _dense(q, kd, vd, table, kv_lens):
+    """attention_decode's exact softmax math over the gathered window."""
+    bs = kd.shape[1]
+    W = table.shape[1]
+    k = kd[table].reshape(B, W * bs, G, DH)
+    v = vd[table].reshape(B, W * bs, G, DH)
+    s = jnp.einsum("bgrd,bkgd->bgrk", q, k)
+    valid = jnp.arange(W * bs)[None, :] < kv_lens[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bgrk,bkgd->bgrd", w, v)
+
+
+# every boundary case for bs=8, W=3: single position, one short block,
+# exactly one block, off-boundary, at-boundary with an empty tail block,
+# and the completely full table
+BOUNDARY_LENS = [(1, 1, 1), (3, 8, 9), (8, 16, 24), (9, 17, 23),
+                 (16, 24, 8), (24, 24, 24)]
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+@pytest.mark.parametrize("lens", BOUNDARY_LENS)
+def test_kernel_matches_dense_attention_math(kv_dtype, lens):
+    bs, width = 8, 3
+    q, pool, table, kd, vd = _setup(bs, width, kv_dtype)
+    kv_lens = jnp.asarray(lens, jnp.int32)
+    out = fd.flash_decode(q, pool, table, kv_lens, use_flash=True)
+    want = _dense(q, kd, vd, table, kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("kv_dtype", ["bf16", "int8"])
+def test_reference_path_matches_dense_attention_math(kv_dtype):
+    bs, width = 8, 3
+    q, pool, table, kd, vd = _setup(bs, width, kv_dtype)
+    kv_lens = jnp.asarray([5, 16, 23], jnp.int32)
+    out = fd.flash_decode(q, pool, table, kv_lens, use_flash=False)
+    want = _dense(q, kd, vd, table, kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_single_block_table():
+    """W=1: the whole KV window is one (possibly partial) block."""
+    q, pool, table, kd, vd = _setup(4, 1, "bf16")
+    kv_lens = jnp.asarray([1, 3, 4], jnp.int32)
+    out = fd.flash_decode(q, pool, table, kv_lens, use_flash=True)
+    want = _dense(q, kd, vd, table, kv_lens)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_cross_block_size_stability():
+    """The same logical KV content served at different block sizes must
+    agree within the documented f32 tolerance (the engine-level greedy
+    token streams are asserted bit-equal in tests/test_paging.py)."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, G, REP, DH), jnp.float32)
+    S = 24  # logical positions per row
+    kf = jax.random.normal(ks[1], (B, S, G, DH), jnp.float32)
+    vf = jax.random.normal(ks[2], (B, S, G, DH), jnp.float32)
+    kv_lens = jnp.asarray([5, 17, 24], jnp.int32)
+    outs = []
+    for bs in (4, 8, 24):
+        width = S // bs
+        # pack the contiguous [B, S] rows into row-major blocks
+        kp = kf.reshape(B * width, bs, G, DH).astype(jnp.bfloat16)
+        vp = vf.reshape(B * width, bs, G, DH).astype(jnp.bfloat16)
+        trash = jnp.zeros((1, bs, G, DH), jnp.bfloat16)
+        pool = {"k": jnp.concatenate([kp, trash]),
+                "v": jnp.concatenate([vp, trash])}
+        table = jnp.arange(B * width, dtype=jnp.int32).reshape(B, width)
+        outs.append(np.asarray(
+            fd.flash_decode(q, pool, table, kv_lens, use_flash=True)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-5, atol=2e-5)
+
+
+def test_int8_requires_scales():
+    q, pool, table, _, _ = _setup(8, 2, "int8")
+    with pytest.raises(ValueError, match="requires k_scale/v_scale"):
+        from repro.kernels.flash_decode import kernel as k
+        k.flash_decode(q, pool["k"], pool["v"], table,
+                       jnp.asarray([1, 1, 1], jnp.int32))
+
+
+def test_zero_length_row_is_finite():
+    """kv_lens=0 rows (nothing live) must produce zeros, not NaNs."""
+    q, pool, table, _, _ = _setup(8, 2, "bf16")
+    out = fd.flash_decode(q, pool, table, jnp.asarray([0, 5, 0], jnp.int32))
+    assert bool(jnp.isfinite(out).all())
+    np.testing.assert_array_equal(np.asarray(out[0]), 0.0)
