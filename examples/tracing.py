@@ -1,0 +1,112 @@
+"""One Chrome trace for a mixed neurosymbolic + LM chaos run.
+
+The observability tentpole, end to end: three differently shaped engines
+(NVSA abduction, LVRF row decoding, transformer greedy decode) behind one
+``Runtime(obs=Recorder())``, with seeded fault injection on the LVRF engine
+and EWMA-driven re-tuning opted in — all recorded on ONE monotonic clock
+and exported as a single Trace Event Format JSON.
+
+Open the output in Perfetto (https://ui.perfetto.dev) or chrome://tracing:
+
+  * the ``requests`` track shows every request-lifecycle span (submit to
+    resolution) with ``admit`` instants where the stepper ingested it;
+  * the ``nvsa`` / ``lvrf`` / ``lm`` tracks show each engine's step /
+    sweep-burst / decode-burst / retire spans — and, on lvrf, the
+    ``chaos-inject`` instant, the ``recover`` replay span, and the
+    ``resize`` warm handoff;
+  * the ``supervisor`` track shows the ``fault-cycle`` span (fault ->
+    quarantined -> recovered child instants) and the ``retune`` decision
+    span with its plan_drift_ratio args.
+
+    PYTHONPATH=src python examples/tracing.py [out.json]
+"""
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import engine, obs
+from repro import runtime as rt
+from repro.configs.registry import ARCHS
+from repro.models import lvrf, nvsa
+from repro.nn import transformer as T
+from repro.runtime import faults as flt
+
+out_path = sys.argv[1] if len(sys.argv) > 1 else "trace.json"
+rng = np.random.default_rng(0)
+rec = obs.Recorder()
+
+# --- three engines, one recorder -----------------------------------------
+ncfg = nvsa.NVSAConfig()
+nspec = engine.registry.build("nvsa_abduction", jax.random.PRNGKey(0),
+                              cfg=ncfg)
+lspec = engine.registry.build("lvrf_rows", jax.random.PRNGKey(0))
+lcfg = lvrf.LVRFConfig()
+atoms = lvrf.init_atoms(jax.random.split(jax.random.PRNGKey(0))[0], lcfg)
+mcfg = ARCHS["llama3.2-3b"].smoke()
+params, _ = T.init(jax.random.PRNGKey(0), mcfg)
+
+# over-provisioned against an assumed 1000 rps: the EWMA drift check will
+# shrink it mid-run, putting a resize span on the trace (warm handoff)
+lvrf_eng = engine.Engine(lspec, slots=16)
+# seeded chaos on the lvrf engine: one injected step fault -> the trace
+# shows chaos-inject, then the supervisor's fault-cycle through recovery
+lvrf_chaos = flt.ChaosEngine(lvrf_eng, flt.FaultPlan(
+    seed=1, step_error_rate=0.4, max_faults=1))
+
+runtime = rt.Runtime(obs=rec, failure=rt.FailurePolicy(
+    max_restarts=8, backoff_initial_s=0.01, backoff_max_s=0.05))
+runtime.register("nvsa", engine.Engine(nspec, slots=8))
+runtime.register("lvrf", lvrf_chaos, retune=rt.RetunePolicy(
+    threshold=2.0, check_every=1, baseline_rps=1000.0, candidates=(4, 8, 16),
+    use_measured_cost=True))
+runtime.register("lm", rt.LMEngine(mcfg, params, slots=2, max_len=48))
+
+# --- mixed traffic under chaos -------------------------------------------
+attrs = jnp.asarray(rng.integers(0, (5, 6, 10), (8, 3)))
+ctx = nvsa.target_query(nspec.codebooks, attrs, ncfg)
+nkeys = jax.random.split(jax.random.PRNGKey(5), 8)
+vals = jnp.asarray(rng.integers(0, lcfg.n_values, (10, 3)))
+rows = lvrf.encode_row(atoms, vals, lcfg)
+# junk queries never converge: they burn toward max_iters, keeping lvrf
+# busy long enough for the seeded fault to land mid-trajectory (so the
+# recover span has rows to replay) and for the measured step-cost EWMA to
+# accumulate past the excluded compile step (so plan_drift_ratio resolves)
+junk = jnp.asarray(rng.normal(size=(2, lcfg.vsa.dim)), jnp.float32)
+lkeys = jax.random.split(jax.random.PRNGKey(6), 12)
+prompts = [jax.random.randint(jax.random.PRNGKey(i), (6,), 0, mcfg.vocab)
+           for i in range(3)]
+
+with runtime:
+    runtime.submit("nvsa", ctx, keys=nkeys)
+    for j in range(2):  # junk first: they hold slots mid-trajectory
+        runtime.submit("lvrf", junk[j], keys=lkeys[10 + j][None])
+    for i in range(10):
+        runtime.submit("lvrf", rows[i], keys=lkeys[i][None])
+    for p in prompts:
+        runtime.submit("lm", p, max_new_tokens=8)
+    done = runtime.drain(timeout=600, return_exceptions=True)
+    stats = runtime.stats()
+
+faults = stats["lvrf"]["telemetry"]["faults"]
+print(f"[run] {len(done)} futures resolved "
+      f"({sum(isinstance(d, Exception) for d in done)} structured faults); "
+      f"lvrf faults={faults} recoveries="
+      f"{stats['lvrf']['telemetry']['recoveries']} "
+      f"slots {16}->{lvrf_eng.slots} "
+      f"(retunes={stats['lvrf']['telemetry']['retunes']})")
+drift = stats["lvrf"]["telemetry"]["plan_drift_ratio"]
+print(f"[plan] lvrf modeled unit cost "
+      f"{stats['lvrf']['telemetry']['modeled_unit_s']} s vs measured -> "
+      f"plan_drift_ratio={drift and round(drift, 2)}")
+
+errors = obs.validate(rec.spans.snapshot())
+assert not errors, errors
+rec.write_chrome_trace(out_path)
+spans = rec.spans.snapshot()
+per_track: dict = {}
+for s in spans:
+    per_track[s.track] = per_track.get(s.track, 0) + 1
+print(f"[trace] {len(spans)} spans across tracks {per_track} -> {out_path}")
+print("[trace] open in https://ui.perfetto.dev or chrome://tracing")

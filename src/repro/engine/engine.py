@@ -19,7 +19,6 @@ model and picks the sweep burst that fits the neural overlap window
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import Any
 
@@ -27,6 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.cogsim import model as hw_model
 from repro.core import factorizer as fz
 from repro.core import scheduler as sch
@@ -87,6 +87,12 @@ def derive_sweeps_per_step(spec: ServeSpec, slots: int, hw=hw_model.COGSYS, *,
     return 8
 
 
+# Rolling latency windows are capped so non-destructive snapshot() readers
+# (metrics scrapes, dashboards) can coexist with a serving loop that never
+# calls the draining stats() — memory stays bounded either way.
+LAT_WINDOW_CAP = 1024
+
+
 def rolling_latency_ms(lats) -> dict:
     """p50/p99 (in ms) of one drained latency window, ``None`` when empty.
 
@@ -136,12 +142,24 @@ class Engine:
     this same class — see :mod:`repro.engine.pipelines`.
     """
 
+    engine_kind = "factorizer"  # unified stats schema discriminator
+
     def __init__(self, spec: ServeSpec, *, slots: int = 32,
                  sweeps_per_step: int | None = None, hw=hw_model.COGSYS,
-                 key: jax.Array | None = None, fused=None):
+                 key: jax.Array | None = None, fused=None, obs=None,
+                 clock=None):
         self.spec = spec
         self.slots = slots
         self.hw = hw
+        # Observability seam: spans + metrics recorded AROUND the device
+        # dispatches (never inside jitted code).  NULL default is a
+        # behavioral no-op; Runtime.register rebinds obs/track/clock onto
+        # engines built with the defaults so one recorder (and ONE monotonic
+        # clock) covers the whole stack.
+        self.obs = obs if obs is not None else obs_mod.NULL
+        self.obs_track = spec.name
+        self._default_clock = clock is None
+        self._clock = clock if clock is not None else self.obs.clock
         # Kernel knobs for fused-eligible specs (cfg.fused_step &c. — see
         # factorizer.fused_sweep_eligible): a
         # repro.kernels.resonator_step.ops.FusedConfig or None (defaults).
@@ -206,6 +224,41 @@ class Engine:
         self._sweeps = jax.jit(run_sweeps)
         self._refill_many = jax.jit(rs.refill_many)
         self._decode = jax.jit(rs.decode)
+        self._record_structure()
+
+    def _psums_per_sweep(self) -> int:
+        """Cross-device psums ONE sweep dispatches (0 on a single device;
+        the mesh engine overrides with its collectives contract)."""
+        return 0
+
+    def _record_structure(self) -> None:
+        """Structural gauges — the transferable (non-wall-clock) signal —
+        refreshed on every program (re)build: slot shape, burst size, and
+        the per-sweep kernel/collective structure."""
+        if not self.obs.enabled:
+            return
+        track = self.obs_track
+        self.obs.gauge("slots", self.slots, engine=track)
+        self.obs.gauge("units_per_step", self.sweeps_per_step, engine=track)
+        self.obs.gauge("psums_per_sweep", self._psums_per_sweep(),
+                       engine=track)
+        self.obs.gauge(
+            "pallas_calls_per_sweep",
+            1 if (self.spec.cfg is not None
+                  and fz.fused_sweep_eligible(self.spec.cfg)) else 0,
+            engine=track)
+
+    def bind_obs(self, obs, track: str | None = None) -> None:
+        """Adopt a recorder after construction — the ``Runtime.register``
+        seam: an engine built with the defaults joins the runtime's recorder
+        (and its monotonic clock, keeping every layer's timestamps on one
+        axis); an engine built with an explicit ``clock=`` keeps it."""
+        self.obs = obs
+        if track is not None:
+            self.obs_track = track
+        if self._default_clock:
+            self._clock = obs.clock
+        self._record_structure()
 
     # -- request intake ----------------------------------------------------
 
@@ -225,11 +278,12 @@ class Engine:
                 self._key, key = jax.random.split(self._key)
             keys = jax.random.split(key, k)
         req = Request(self._next_id, queries, jnp.asarray(keys), meta,
-                      time.perf_counter(), self.sweeps_total)
+                      self._clock(), self.sweeps_total)
         req.rows = [None] * k
         self._next_id += 1
         for qi in range(k):
             self._queue.append((req, qi))
+        self.obs.count("submitted", 1, engine=self.obs_track)
         return req.id
 
     # -- serving loop ------------------------------------------------------
@@ -257,9 +311,11 @@ class Engine:
             idx[j] = slot
             new_qs[j] = np.asarray(q)
             keys[j] = np.asarray(k)
-        self.qs, self.state = self._refill_many(
-            self.qs, self.state, jnp.asarray(idx), jnp.asarray(new_qs),
-            jnp.asarray(keys))
+        with self.obs.span("fill", track=self.obs_track, cat="engine",
+                           args={"rows": len(fills)}):
+            self.qs, self.state = self._refill_many(
+                self.qs, self.state, jnp.asarray(idx), jnp.asarray(new_qs),
+                jnp.asarray(keys))
 
     def _retire(self) -> list:
         done = np.asarray(self.state.done)
@@ -284,7 +340,7 @@ class Engine:
     def _finalize(self, req: Request) -> None:
         req.factorization = jax.tree.map(lambda *r: np.stack(r), *req.rows)
         req.iterations = req.factorization.iterations
-        req.done_time = time.perf_counter()
+        req.done_time = self._clock()
         req.done_sweep = self.sweeps_total
         req.result = req.factorization if self.spec.postprocess is None else \
             self.spec.postprocess(req.queries, req.factorization, req.meta)
@@ -292,18 +348,33 @@ class Engine:
         self.completed_total += 1
         self._lat_sum += req.latency_s
         self._lat_window.append(req.latency_s)
+        del self._lat_window[:-LAT_WINDOW_CAP]
 
     def step(self) -> list:
         """Fill free slots, run one adSCH-sized sweep burst, retire converged
         rows.  Returns the requests completed by this step."""
-        self._fill()
-        if all(o is None for o in self._owner):
-            return []
-        self.state, n = self._sweeps(self.qs, self.state,
-                                     jnp.int32(self.sweeps_per_step))
-        self.sweeps_total += int(n)
-        self.steps_total += 1
-        return self._retire()
+        obs = self.obs
+        with obs.span("step", track=self.obs_track, cat="engine") as sp:
+            self._fill()
+            if all(o is None for o in self._owner):
+                return []
+            with obs.span("sweep-burst", track=self.obs_track,
+                          cat="engine") as bp:
+                self.state, n = self._sweeps(self.qs, self.state,
+                                             jnp.int32(self.sweeps_per_step))
+                n = int(n)  # host sync: the burst span covers device time
+            self.sweeps_total += n
+            self.steps_total += 1
+            with obs.span("retire", track=self.obs_track, cat="engine"):
+                finished = self._retire()
+        if obs.enabled:
+            bp.args["sweeps"] = n
+            sp.args.update(sweeps=n, retired=len(finished))
+            obs.count("steps", 1, engine=self.obs_track)
+            obs.count("sweeps", n, engine=self.obs_track)
+            if finished:
+                obs.count("completed", len(finished), engine=self.obs_track)
+        return finished
 
     def drain(self, max_steps: int = 100_000) -> list:
         """Run until every submitted request completed; returns them all
@@ -342,6 +413,8 @@ class Engine:
             raise ValueError(f"resize needs at least 1 slot, got {slots}")
         if slots == self.slots:
             return
+        rsid = self.obs.begin("resize", track=self.obs_track, cat="engine",
+                              args={"from": self.slots, "to": slots})
         live = [(s, self._owner[s]) for s in range(self.slots)
                 if self._owner[s] is not None]
         keep, overflow = live[:slots], live[slots:]
@@ -374,6 +447,9 @@ class Engine:
                 it=jax.device_put(old_state.it, self.state.it.sharding))
         self.resizes_total += 1
         self._step_cost_cache = None
+        self.obs.end(rsid, args={"carried": len(keep),
+                                 "requeued": len(overflow)})
+        self.obs.count("resizes", 1, engine=self.obs_track)
 
     # -- fault tolerance ---------------------------------------------------
 
@@ -391,13 +467,20 @@ class Engine:
         trajectory: bit-equal to a fault-free run, just later.  Queued work
         and already-retired rows are untouched.
         """
-        live = [(s, self._owner[s]) for s in range(self.slots)
-                if self._owner[s] is not None]
-        for _, owner in reversed(live):  # preserve submission order up front
-            self._queue.appendleft(owner)
-        self._build_programs()  # fresh parked state; corrupt state dropped
-        self._owner = [None] * self.slots
-        self.recoveries_total += 1
+        with self.obs.span("recover", track=self.obs_track,
+                           cat="engine") as sp:
+            live = [(s, self._owner[s]) for s in range(self.slots)
+                    if self._owner[s] is not None]
+            for _, owner in reversed(live):  # submission order kept up front
+                self._queue.appendleft(owner)
+            self._build_programs()  # fresh parked state; corrupt state dropped
+            self._owner = [None] * self.slots
+            self.recoveries_total += 1
+            if sp is not None:
+                # the "recoveries" METRIC is supervision-scoped (counted by
+                # the runtime's quarantine service, next to faults and
+                # quarantines); the engine records only the span
+                sp.args["replayed"] = len(live)
         return len(live)
 
     def cancel(self, request_id: int) -> bool:
@@ -420,6 +503,10 @@ class Engine:
         if parked:
             self.state = self.state._replace(
                 done=self.state.done.at[jnp.asarray(parked)].set(True))
+        if reclaimed or parked:
+            self.obs.instant("cancel", track=self.obs_track, cat="engine",
+                             args={"request": request_id,
+                                   "parked_slots": len(parked)})
         return reclaimed or bool(parked)
 
     def health_check(self) -> str | None:
@@ -457,19 +544,33 @@ class Engine:
             self._step_cost_cache = self.sweeps_per_step * t_unit
         return self._step_cost_cache
 
-    def stats(self) -> dict:
-        """Counters + ROLLING latency percentiles.
+    def snapshot(self, reset: bool = False) -> dict:
+        """Unified-schema counters + rolling latency percentiles.
 
-        The percentiles cover only requests completed since the previous
-        ``stats()`` call (long-running runtimes would otherwise report
-        all-time p50/p99 forever); the totals — ``completed``, ``steps``,
-        ``sweeps_total``, all-time mean latency — keep accumulating (and are
-        tracked incrementally, so evicting entries from ``completed`` does
-        not distort them).
+        The common keys every engine kind reports (see DESIGN.md
+        "Observability"): ``engine_kind``, ``slots``, ``units_per_step`` /
+        ``units_total`` (one *unit* is this engine's step atom — a resonator
+        sweep here, a decode token for the LM adapter), ``steps``,
+        ``completed``, ``resizes``, ``recoveries``, and the rolling window
+        percentiles with ``window_completed``.  Engine-specific aliases
+        (``sweeps_per_step``/``sweeps_total``) ride along.
+
+        ``reset=False`` (the default) is NON-destructive: concurrent
+        readers — the Runtime's stats merge, a metrics scrape, a debugging
+        print — all see the same window.  ``reset=True`` drains the rolling
+        latency window (the read-and-reset semantics :meth:`stats` keeps for
+        interval-over-interval reporting); totals always keep accumulating
+        (tracked incrementally, so evicting ``completed`` entries does not
+        distort them).
         """
-        lats, self._lat_window = self._lat_window, []
+        lats = self._lat_window
+        if reset:
+            self._lat_window = []
         return {
+            "engine_kind": self.engine_kind,
             "slots": self.slots,
+            "units_per_step": self.sweeps_per_step,
+            "units_total": self.sweeps_total,
             "sweeps_per_step": self.sweeps_per_step,
             "steps": self.steps_total,
             "sweeps_total": self.sweeps_total,
@@ -481,3 +582,10 @@ class Engine:
             "latency_mean_all_ms": (self._lat_sum / self.completed_total * 1e3
                                     if self.completed_total else None),
         }
+
+    def stats(self) -> dict:
+        """Read-and-reset snapshot (the original destructive window
+        semantics).  Prefer :meth:`snapshot` when more than one reader
+        exists — two ``stats()`` callers race and each sees half the
+        window."""
+        return self.snapshot(reset=True)

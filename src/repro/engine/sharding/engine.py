@@ -43,11 +43,14 @@ class ShardedEngine(Engine):
     the adSCH cost model and ``arrival_rps``.
     """
 
+    engine_kind = "sharded_factorizer"
+
     def __init__(self, spec: ServeSpec, *, mesh=None,
                  codebook_placement: str = "replicated",
                  slots: int | None = None, arrival_rps: float | None = None,
                  sweeps_per_step: int | None = None, hw=hw_model.COGSYS,
-                 key: jax.Array | None = None, fused=None):
+                 key: jax.Array | None = None, fused=None, obs=None,
+                 clock=None):
         self.mesh = mesh if mesh is not None else launch_mesh.make_host_mesh()
         for ax in ("data", "model"):
             if ax not in self.mesh.shape:
@@ -75,7 +78,7 @@ class ShardedEngine(Engine):
             raise ValueError(f"the data axis size ({self.data_shards}) must "
                              f"divide slots ({slots})")
         super().__init__(spec, slots=slots, sweeps_per_step=sweeps_per_step,
-                         hw=hw, key=key, fused=fused)
+                         hw=hw, key=key, fused=fused, obs=obs, clock=clock)
 
     # -- seams over the base engine ---------------------------------------
 
@@ -175,6 +178,15 @@ class ShardedEngine(Engine):
         self.qs = put(qs0, P("data"))
         self.state = jax.tree.map(put, st, state_spec,
                                   is_leaf=lambda x: isinstance(x, P))
+        self._record_structure()
+
+    def _psums_per_sweep(self) -> int:
+        """The documented collectives contract per sweep iteration: one
+        live-count psum over ``data``, plus one packed psum per factor when
+        the codebook rows are sharded over ``model``."""
+        if self._rows:
+            return self.spec.codebooks.shape[0] + 1
+        return 1
 
     def resize(self, slots: int) -> None:
         """Warm handoff re-tune (see :meth:`Engine.resize`); the new global
@@ -195,8 +207,8 @@ class ShardedEngine(Engine):
         bit-equal to the single-device engine's."""
         return super().recover()
 
-    def stats(self) -> dict:
-        st = super().stats()
+    def snapshot(self, reset: bool = False) -> dict:
+        st = super().snapshot(reset)
         st.update({"mesh": dict(self.mesh.shape),
                    "codebook_placement": self.codebook_placement,
                    "slots_per_shard": self.slots // self.data_shards})

@@ -21,24 +21,29 @@ Two device layouts behind one API:
 from __future__ import annotations
 
 import argparse
+import logging
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.configs.registry import ARCHS
 from repro.lm import model as lm_model
 from repro.lm import sampling as lm_sampling
 from repro.lm.paging import BlockTablePool, PagedConfig, cdiv
 from repro.nn import transformer as T
 
+log = logging.getLogger(__name__)
+
 
 class ServeEngine:
     """Static-batch continuous batching over a shared KV cache."""
 
     def __init__(self, cfg, params, batch_slots: int, max_len: int,
-                 paged: PagedConfig | None = None):
+                 paged: PagedConfig | None = None, obs=None,
+                 obs_track: str = "lm"):
         if paged is not None and not isinstance(paged, PagedConfig):
             # catch the natural misuse paged=True before it dies as an
             # opaque AttributeError inside a jit trace (same guard as the
@@ -49,6 +54,10 @@ class ServeEngine:
         self.max_len = max_len
         self.slots = batch_slots
         self.paged = paged
+        # Observability seam (see repro.obs): spans/counters recorded around
+        # the jitted dispatches; the NULL default costs one attribute read.
+        self.obs = obs if obs is not None else obs_mod.NULL
+        self.obs_track = obs_track
         self.active = np.zeros(batch_slots, bool)
         self.generated: list = [[] for _ in range(batch_slots)]
         # Host mirror of each slot's KV length + capacity parking flags: a
@@ -196,6 +205,7 @@ class ServeEngine:
             raise TypeError(f"sampling= expects a SamplingSpec or None, "
                             f"got {sampling!r}")
         logits = None
+        disp0 = self.prefill_dispatches
         if self.paged is not None:
             self.blocks.release(slot)
             if not self.blocks.ensure(slot, n):
@@ -213,19 +223,28 @@ class ServeEngine:
                 count = len(chunk)
                 padded = np.zeros(C, np.int32)
                 padded[:count] = chunk
-                lg, self.pool = self._prefill_paged(
-                    self.params, self.pool, row_table, jnp.int32(c0),
-                    jnp.asarray(padded)[None], jnp.int32(count))
+                with self.obs.span("prefill-chunk", track=self.obs_track,
+                                   cat="lm", args={"slot": slot, "pos": c0,
+                                                   "tokens": count}):
+                    lg, self.pool = self._prefill_paged(
+                        self.params, self.pool, row_table, jnp.int32(c0),
+                        jnp.asarray(padded)[None], jnp.int32(count))
                 self.prefill_dispatches += 1
                 logits = lg[:, count - 1]
         else:
-            self.cache = self._reset_slot(self.cache, self._fresh_cache,
-                                          jnp.int32(slot))
-            for t in range(n - 1):
-                lg, self.cache = self._prefill(
-                    self.params, self.cache, prompt[t], jnp.int32(slot))
-                self.prefill_dispatches += 1
-                logits = lg[slot]
+            with self.obs.span("prefill", track=self.obs_track, cat="lm",
+                               args={"slot": slot, "tokens": n - 1}):
+                self.cache = self._reset_slot(self.cache, self._fresh_cache,
+                                              jnp.int32(slot))
+                for t in range(n - 1):
+                    lg, self.cache = self._prefill(
+                        self.params, self.cache, prompt[t], jnp.int32(slot))
+                    self.prefill_dispatches += 1
+                    logits = lg[slot]
+        if self.obs.enabled and self.prefill_dispatches > disp0:
+            self.obs.count("prefill_dispatches",
+                           self.prefill_dispatches - disp0,
+                           engine=self.obs_track)
         self.active[slot] = True
         self.generated[slot] = [int(prompt[-1])]
         self.lens[slot] = n - 1
@@ -288,7 +307,12 @@ class ServeEngine:
             logits, self.cache = self._decode(self.params, self.cache, last,
                                               jnp.asarray(self.active))
         self.decode_dispatches += 1
-        self.kv_bytes_touched += self._kv_step_bytes()
+        kv_bytes = self._kv_step_bytes()
+        self.kv_bytes_touched += kv_bytes
+        if self.obs.enabled:
+            self.obs.count("decode_dispatches", 1, engine=self.obs_track)
+            self.obs.count("kv_bytes_touched", kv_bytes,
+                           engine=self.obs_track)
         self.lens[self.active] += 1
         if sampler == "greedy":
             nxt = np.array(jnp.argmax(logits[:, -1], axis=-1))
@@ -345,15 +369,26 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen", type=int, default=32)
     ap.add_argument("--paged", action="store_true")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="write a Chrome-trace JSON of the run to PATH")
     args = ap.parse_args()
+    # The demo-main keeps its console output, but through logging (library
+    # code must never print): a plain-message handler on this module's
+    # logger, only when the app hasn't configured one itself.
+    if not logging.getLogger().handlers and not log.handlers:
+        handler = logging.StreamHandler()
+        handler.setFormatter(logging.Formatter("%(message)s"))
+        log.addHandler(handler)
+        log.setLevel(logging.INFO)
     spec = ARCHS[args.arch]
     cfg = spec.smoke() if args.smoke else spec.full()
     key = jax.random.PRNGKey(0)
     params, _ = T.init(key, cfg)
-    print(f"{cfg.name}: {T.param_count(params):,} params; "
-          f"serving batch={args.batch}")
+    log.info("%s: %s params; serving batch=%d",
+             cfg.name, format(T.param_count(params), ","), args.batch)
+    rec = obs_mod.Recorder() if args.trace else None
     eng = ServeEngine(cfg, params, args.batch, args.prompt_len + args.gen + 1,
-                      paged=PagedConfig() if args.paged else None)
+                      paged=PagedConfig() if args.paged else None, obs=rec)
     prompt = jax.random.randint(key, (args.prompt_len,), 0, cfg.vocab)
     t0 = time.perf_counter()
     for s in range(args.batch):
@@ -365,10 +400,13 @@ def main():
     jax.block_until_ready(eng.pool if args.paged else eng.cache)
     dec_t = time.perf_counter() - t0
     tps = args.batch * args.gen / dec_t
-    print(f"prefill {prefill_t*1e3:.1f}ms ({eng.prefill_dispatches} "
-          f"dispatches); decode {args.gen} steps x {args.batch} "
-          f"slots in {dec_t*1e3:.1f}ms -> {tps:.1f} tok/s")
-    print("sample:", eng.generated[0][:16])
+    log.info("prefill %.1fms (%d dispatches); decode %d steps x %d slots "
+             "in %.1fms -> %.1f tok/s", prefill_t * 1e3,
+             eng.prefill_dispatches, args.gen, args.batch, dec_t * 1e3, tps)
+    log.info("sample: %s", eng.generated[0][:16])
+    if rec is not None:
+        rec.write_chrome_trace(args.trace)
+        log.info("trace written to %s (open in ui.perfetto.dev)", args.trace)
 
 
 if __name__ == "__main__":

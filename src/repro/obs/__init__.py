@@ -1,0 +1,58 @@
+"""repro.obs — zero-overhead-when-disabled observability for the serving
+stack.
+
+The visibility layer the paper's characterization step argues a
+neurosymbolic system needs (compute heterogeneity and hardware
+underutilization are only actionable when you can SEE where a request's
+time goes): request span tracing on one monotonic clock across every layer
+(resonator sweep bursts → Engine → ShardedEngine → Runtime supervision →
+paged LM serving), a unified metrics registry replacing the divergent
+per-engine ``stats()`` schemas, and planner-drift instrumentation
+(``plan_drift_ratio``: adSCH's modeled step cost vs the measured wall-clock
+EWMA, per engine, continuously).
+
+Three rules keep it honest:
+
+  * **injectable** — ``Runtime(obs=)`` / ``Engine(obs=)`` with the
+    :data:`NULL` recorder as the default; nothing global, nothing ambient
+    (except the opt-in ``REPRO_OBS=1`` CI seam, :func:`maybe_obs`);
+  * **never inside jit** — recording happens around device dispatches; the
+    compiled programs are byte-identical with tracing on or off;
+  * **non-destructive reads** — metric snapshots and trace exports never
+    reset recording state, so a scrape and the re-tuner cannot race.
+
+Typical use::
+
+    from repro import obs
+    rec = obs.Recorder()
+    rt = runtime.Runtime(obs=rec)           # engines bind on register()
+    ... serve ...
+    rec.write_chrome_trace("trace.json")    # open in ui.perfetto.dev
+    rec.metrics.snapshot()                  # unified cross-engine metrics
+"""
+from __future__ import annotations
+
+import os
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.recorder import DEFAULT_CLOCK, NULL, NullRecorder, Recorder
+from repro.obs.spans import Span, SpanStore, validate
+from repro.obs.trace import to_chrome_trace, write_chrome_trace
+
+__all__ = [
+    "Counter", "DEFAULT_CLOCK", "Gauge", "Histogram", "MetricsRegistry",
+    "NULL", "NullRecorder", "Recorder", "Span", "SpanStore", "maybe_obs",
+    "to_chrome_trace", "validate", "write_chrome_trace",
+]
+
+
+def maybe_obs(obs=None, *, env: str = "REPRO_OBS"):
+    """Resolve a layer's ``obs=`` argument: an explicit recorder wins, the
+    env seam (``REPRO_OBS=1``) turns on a real recorder for CI's
+    instrumented-path-is-a-no-op run, and otherwise the :data:`NULL`
+    recorder keeps the whole layer free."""
+    if obs is not None:
+        return obs
+    if os.environ.get(env):
+        return Recorder()
+    return NULL

@@ -30,6 +30,8 @@ import time
 
 import numpy as np
 
+from repro import obs as obs_mod
+
 __all__ = [
     "ChaosEngine", "DeadlineExceededError", "EngineDeadError", "FaultError",
     "FaultPlan", "InjectedFault", "ShedError", "WedgedError",
@@ -195,9 +197,22 @@ class ChaosEngine:
 
     # -- Steppable protocol ------------------------------------------------
 
+    def _mark(self, kind: str) -> None:
+        """Stamp an injection instant on the wrapped engine's obs track so a
+        chaos trace shows the cause next to the fault-cycle it triggers (the
+        recorder rides on the inner engine — the harness itself holds no
+        observability state)."""
+        obs = getattr(self.inner, "obs", obs_mod.NULL)
+        if obs.enabled:
+            obs.instant("chaos-inject",
+                        track=getattr(self.inner, "obs_track", "chaos"),
+                        cat="chaos", args={"kind": kind})
+            obs.count("chaos_injected", 1, kind=kind)
+
     def submit(self, payload, **kwargs) -> int:
         if self._fire(self._submit_rng, self.plan.submit_reject_rate,
                       "submit_reject"):
+            self._mark("submit_reject")
             raise InjectedFault("injected submit rejection")
         return self.inner.submit(payload, **kwargs)
 
@@ -210,12 +225,15 @@ class ChaosEngine:
         corrupt = self.plan.corrupt_rate > 0 and \
             bool(self._step_rng.random() < self.plan.corrupt_rate)
         if hang:
+            self._mark("hang")
             self._sleep(self.plan.hang_s)
         if err:
+            self._mark("step_error")
             raise InjectedFault("injected step failure")
         out = self.inner.step()
         if corrupt and self._budget_left() and self._corrupt_state():
             self.injected["corrupt"] += 1
+            self._mark("corrupt")
         return out
 
     def drain(self, *args, **kwargs) -> list:
@@ -227,6 +245,14 @@ class ChaosEngine:
 
     def stats(self) -> dict:
         return {**self.inner.stats(), "chaos": dict(self.injected)}
+
+    def snapshot(self, reset: bool = False) -> dict:
+        """Mirror the inner engine's non-destructive snapshot seam (falling
+        back to its ``stats()``), keeping the chaos counters attached —
+        ``Runtime.stats`` reads through this."""
+        inner = self.inner.snapshot(reset) \
+            if hasattr(self.inner, "snapshot") else self.inner.stats()
+        return {**inner, "chaos": dict(self.injected)}
 
     # Everything else — resize/recover/cancel/health_check/step_cost_s,
     # slots, state, sweeps_total, completed, ... — forwards untouched, so

@@ -37,17 +37,17 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from collections import deque
 from typing import Any
 
 import jax.numpy as jnp
 
+from repro import obs as obs_mod
 from repro.cogsim import model as hw_model
 from repro.core import scheduler as sch
 from repro.engine import registry
-from repro.engine.engine import (derive_sweeps_per_step, rolling_latency_ms,
-                                 step_unit_ops)
+from repro.engine.engine import (LAT_WINDOW_CAP, derive_sweeps_per_step,
+                                 rolling_latency_ms, step_unit_ops)
 from repro.launch.serve import ServeEngine
 from repro.lm.paging import PagedConfig
 from repro.lm.sampling import SamplingSpec
@@ -91,20 +91,28 @@ class LMEngine:
     prompts instead of query vectors, results are generated token lists.
     """
 
+    engine_kind = "lm"  # unified stats schema discriminator
+
     def __init__(self, cfg, params, *, slots: int = 4, max_len: int = 128,
                  prompt_len_hint: int = 16, decode_per_step: int | None = None,
-                 eos_id: int | None = None, paged=None, hw=hw_model.COGSYS):
+                 eos_id: int | None = None, paged=None, hw=hw_model.COGSYS,
+                 obs=None, clock=None):
         self.cfg, self.hw = cfg, hw
         self.slots = slots
         self.eos_id = eos_id
         self.paged = _resolve_paged(paged)
         self._prompt_len_hint = prompt_len_hint
         self._dps_pinned = decode_per_step is not None
+        # Observability seam, mirroring Engine: spans/counters around the
+        # device dispatches, NULL default, one clock (see Engine.bind_obs).
+        self.obs = obs if obs is not None else obs_mod.NULL
+        self.obs_track = "lm"
+        self._default_clock = clock is None
+        self._clock = clock if clock is not None else self.obs.clock
         # kept for fault recovery: recover() rebuilds the device layer from
         # these (params are read-only serving state, never mutated by decode)
         self._params, self._max_len = params, max_len
-        self.serve = ServeEngine(cfg, params, slots, max_len,
-                                 paged=self.paged)
+        self.serve = self._make_serve(slots)
         self.spec = self._build_spec(slots)
         self.decode_per_step = (
             derive_sweeps_per_step(self.spec, slots, hw)
@@ -118,8 +126,36 @@ class LMEngine:
         self.tokens_total = 0
         self.recoveries_total = 0
         self.resizes_total = 0
+        self._lat_sum = 0.0
         self._lat_window: list = []
         self._step_cost = self._modeled_step_cost()
+        self._record_structure()
+
+    def _make_serve(self, slots: int, paged="inherit") -> ServeEngine:
+        return ServeEngine(self.cfg, self._params, slots, self._max_len,
+                           paged=self.paged if paged == "inherit" else paged,
+                           obs=self.obs, obs_track=self.obs_track)
+
+    def _record_structure(self) -> None:
+        if not self.obs.enabled:
+            return
+        track = self.obs_track
+        self.obs.gauge("slots", self.slots, engine=track)
+        self.obs.gauge("units_per_step", self.decode_per_step, engine=track)
+        self.obs.gauge("paged", int(self.paged is not None), engine=track)
+
+    def bind_obs(self, obs, track: str | None = None) -> None:
+        """Adopt a recorder after construction (see ``Engine.bind_obs``);
+        also rebinds the device layer so prefill-chunk spans and dispatch
+        counters land in the same registry."""
+        self.obs = obs
+        if track is not None:
+            self.obs_track = track
+        if self._default_clock:
+            self._clock = obs.clock
+        self.serve.obs = obs
+        self.serve.obs_track = self.obs_track
+        self._record_structure()
 
     def _build_spec(self, slots: int):
         return registry.build(
@@ -152,9 +188,10 @@ class LMEngine:
             raise TypeError(
                 f"sampling= expects a SamplingSpec or None, got {sampling!r}")
         req = LMRequest(self._next_id, prompt, int(max_new_tokens), meta,
-                        time.perf_counter(), sampling=sampling)
+                        self._clock(), sampling=sampling)
         self._next_id += 1
         self._queue.append(req)
+        self.obs.count("submitted", 1, engine=self.obs_track)
         return req.id
 
     # -- serving loop ------------------------------------------------------
@@ -192,12 +229,14 @@ class LMEngine:
                 continue
             req.truncated = stop is None  # parked at KV capacity
             req.tokens = produced[:stop] if stop is not None else produced
-            req.done_time = time.perf_counter()
+            req.done_time = self._clock()
             req.result = {"tokens": req.tokens, "truncated": req.truncated}
             self.tokens_total += len(req.tokens)
             self.completed[req.id] = req
             self.completed_total += 1
+            self._lat_sum += req.latency_s
             self._lat_window.append(req.latency_s)
+            del self._lat_window[:-LAT_WINDOW_CAP]
             self._owner[slot] = None
             self.serve.release_slot(slot)  # paged: blocks back to the pool
             finished.append(req)
@@ -206,14 +245,34 @@ class LMEngine:
     def step(self) -> list:
         """Fill free slots (prefill), run one adSCH-sized decode burst,
         retire finished slots.  Returns the requests completed this step."""
-        self._fill()
-        if all(o is None for o in self._owner):
-            return []
-        for _ in range(self.decode_per_step):
-            if self.serve.step() is None:  # every live slot parked at capacity
-                break
-        self.steps_total += 1
-        return self._retire()
+        obs = self.obs
+        with obs.span("step", track=self.obs_track, cat="engine") as sp:
+            with obs.span("fill", track=self.obs_track, cat="engine"):
+                self._fill()
+            if all(o is None for o in self._owner):
+                return []
+            with obs.span("decode-burst", track=self.obs_track,
+                          cat="engine") as bp:
+                n = 0
+                for _ in range(self.decode_per_step):
+                    # every live slot parked at capacity ends the burst early
+                    if self.serve.step() is None:
+                        break
+                    n += 1
+            self.steps_total += 1
+            with obs.span("retire", track=self.obs_track, cat="engine"):
+                finished = self._retire()
+        if obs.enabled:
+            bp.args["decodes"] = n
+            sp.args.update(decodes=n, retired=len(finished))
+            obs.count("steps", 1, engine=self.obs_track)
+            obs.count("decode_steps", n, engine=self.obs_track)
+            if finished:
+                obs.count("completed", len(finished), engine=self.obs_track)
+                obs.count("tokens",
+                          sum(len(r.tokens) for r in finished),
+                          engine=self.obs_track)
+        return finished
 
     def drain(self, max_steps: int = 100_000) -> list:
         out = []
@@ -244,6 +303,8 @@ class LMEngine:
             raise ValueError(f"resize needs >= 1 slot, got {new_slots}")
         if new_slots == self.slots:
             return
+        rsid = self.obs.begin("resize", track=self.obs_track, cat="engine",
+                              args={"from": self.slots, "to": new_slots})
         live = [(s, self._owner[s]) for s in range(self.slots)
                 if self._owner[s] is not None]
         if self.paged is not None:
@@ -254,10 +315,10 @@ class LMEngine:
             self._owner = [req for _, req in keep] + \
                 [None] * (new_slots - len(keep))
         else:
+            keep, overflow = [], live
             for _, req in reversed(live):
                 self._queue.appendleft(req)
-            self.serve = ServeEngine(self.cfg, self._params, new_slots,
-                                     self._max_len)
+            self.serve = self._make_serve(new_slots, paged=None)
             self._owner = [None] * new_slots
         self.slots = new_slots
         self.spec = self._build_spec(new_slots)
@@ -266,6 +327,10 @@ class LMEngine:
                 self.spec, new_slots, self.hw)
         self._step_cost = self._modeled_step_cost()
         self.resizes_total += 1
+        self._record_structure()
+        self.obs.end(rsid, args={"carried": len(keep),
+                                 "requeued": len(overflow)})
+        self.obs.count("resizes", 1, engine=self.obs_track)
 
     # -- fault tolerance ---------------------------------------------------
 
@@ -282,13 +347,18 @@ class LMEngine:
         tokens are simply regenerated (``_retire`` reads the device layer's
         ``generated``, which the rebuild reset).
         """
-        live = [req for req in self._owner if req is not None]
-        for req in reversed(live):
-            self._queue.appendleft(req)
-        self.serve = ServeEngine(self.cfg, self._params, self.slots,
-                                 self._max_len, paged=self.paged)
-        self._owner = [None] * self.slots
-        self.recoveries_total += 1
+        with self.obs.span("recover", track=self.obs_track,
+                           cat="engine") as sp:
+            live = [req for req in self._owner if req is not None]
+            for req in reversed(live):
+                self._queue.appendleft(req)
+            self.serve = self._make_serve(self.slots)
+            self._owner = [None] * self.slots
+            self.recoveries_total += 1
+            if sp is not None:
+                # "recoveries" as a metric is supervision-scoped (counted by
+                # the runtime's quarantine service); the engine keeps the span
+                sp.args["replayed"] = len(live)
         return len(live)
 
     def cancel(self, request_id: int) -> bool:
@@ -316,10 +386,20 @@ class LMEngine:
     def step_cost_s(self) -> float:
         return self._step_cost
 
-    def stats(self) -> dict:
-        lats, self._lat_window = self._lat_window, []
+    def snapshot(self, reset: bool = False) -> dict:
+        """Unified-schema counters (see ``Engine.snapshot``: a *unit* here
+        is one generated decode token).  ``reset=False`` is non-destructive;
+        ``reset=True`` drains the rolling latency window.  LM-specific keys
+        (``decode_per_step``/``tokens_total``, dispatch + KV-byte structural
+        counters) ride along."""
+        lats = self._lat_window
+        if reset:
+            self._lat_window = []
         return {
+            "engine_kind": self.engine_kind,
             "slots": self.slots,
+            "units_per_step": self.decode_per_step,
+            "units_total": self.tokens_total,
             "decode_per_step": self.decode_per_step,
             "paged": self.paged is not None,
             "steps": self.steps_total,
@@ -332,4 +412,10 @@ class LMEngine:
             "kv_bytes_touched": self.serve.kv_bytes_touched,
             "window_completed": len(lats),
             **rolling_latency_ms(lats),
+            "latency_mean_all_ms": (self._lat_sum / self.completed_total * 1e3
+                                    if self.completed_total else None),
         }
+
+    def stats(self) -> dict:
+        """Read-and-reset snapshot (see ``Engine.stats``)."""
+        return self.snapshot(reset=True)

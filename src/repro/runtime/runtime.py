@@ -89,6 +89,7 @@ import warnings
 from collections import deque
 from concurrent.futures import Future, TimeoutError as FutureTimeout
 
+from repro import obs as obs_mod
 from repro.engine.sharding.autotune import retune_slots
 from repro.runtime import faults as flt
 from repro.runtime import telemetry as tele
@@ -144,6 +145,7 @@ class _Supervision:
     awaiting_completion: bool = False  # recovery happened; next finish logs
     last_error: BaseException | None = None
     events: list = dataclasses.field(default_factory=list)  # (t, tag)
+    cycle_sid: int | None = None  # open "fault-cycle" obs span, if tracing
 
     def log(self, t: float, tag: str) -> None:
         self.events.append((t, tag))
@@ -158,11 +160,17 @@ class _Takeover(BaseException):
 class Runtime:
     """Async serving frontend over one or more ``Steppable`` engines."""
 
-    def __init__(self, *, clock=time.monotonic, idle_sleep_s: float = 1e-3,
+    def __init__(self, *, clock=None, idle_sleep_s: float = 1e-3,
                  max_pending: int | None = None,
                  watchdog_s: float | None = 180.0,
-                 failure: FailurePolicy | None = None):
-        self._clock = clock
+                 failure: FailurePolicy | None = None, obs=None):
+        # Observability: explicit recorder > REPRO_OBS=1 env seam > NULL
+        # (free).  register() rebinds default-built engines onto this
+        # recorder so the whole stack traces on ONE monotonic clock; the
+        # runtime's own clock likewise defaults to the recorder's
+        # (obs_mod.DEFAULT_CLOCK = time.monotonic when tracing is off).
+        self.obs = obs_mod.maybe_obs(obs)
+        self._clock = clock if clock is not None else self.obs.clock
         self._idle_sleep_s = idle_sleep_s
         # admission control: staged-but-not-ingested requests past this bound
         # are shed at submit() (None: unbounded)
@@ -188,6 +196,7 @@ class Runtime:
         self._steps_since_check: dict = {}
         self._pending: deque = deque()  # (name, gid, payload, kwargs, t_sub)
         self._futures: dict = {}  # gid -> Future
+        self._req_spans: dict = {}  # gid -> open request-lifecycle span id
         self._gid_of: dict = {}  # (name, engine-local id) -> gid
         self._local_of: dict = {}  # gid -> (name, engine-local id)
         self._deadlines: list = []  # heap of (expiry_t, gid, name)
@@ -216,6 +225,14 @@ class Runtime:
         if name in self._engines:
             raise ValueError(f"engine {name!r} already registered")
         engine = flt.maybe_chaos_wrap(engine)  # CI transparency run hook
+        # Engines built with the defaults join this runtime's recorder under
+        # their registered name — one recorder, one clock, one trace for the
+        # whole stack.  bind_obs resolves through ChaosEngine's attribute
+        # forwarding onto the wrapped engine; explicitly-instrumented
+        # engines (obs enabled at construction) are left alone.
+        if self.obs.enabled and hasattr(engine, "bind_obs") and \
+                not getattr(engine, "obs", obs_mod.NULL).enabled:
+            engine.bind_obs(self.obs, track=name)
         if retune is not None and not supports_resize(engine):
             raise ValueError(f"engine {name!r} has no resize(); it cannot "
                              "opt into re-tuning")
@@ -354,6 +371,16 @@ class Runtime:
             if deadline_s is not None:
                 heapq.heappush(self._deadlines,
                                (now + float(deadline_s), gid, engine))
+        if self.obs.enabled:
+            # The request-lifecycle span: opened at submit, closed by the
+            # future's done-callback (whichever thread resolves it — result,
+            # deadline expiry, engine death); engine-internal spans correlate
+            # by time on the shared clock, not by parentage.
+            self._req_spans[gid] = self.obs.begin(
+                "request", track="requests", cat="request",
+                args={"gid": gid, "engine": engine})
+            fut.add_done_callback(
+                lambda f, gid=gid: self._close_req_span(gid, f))
         self._pending.append((engine, gid, payload, kwargs, now))
         self._wake.set()
         # Close the race with a concurrently-dying or concurrently-stopping
@@ -365,6 +392,16 @@ class Runtime:
                 "runtime stepper died" if self._error is not None
                 else "runtime stopped with the request unfinished"))
         return gid
+
+    def _close_req_span(self, gid: int, fut: Future) -> None:
+        sid = self._req_spans.pop(gid, None)
+        if sid is None:
+            return
+        exc = fut.exception()
+        self.obs.end(sid, args={
+            "outcome": "ok" if exc is None else type(exc).__name__})
+        self.obs.count("resolved", 1,
+                       outcome="ok" if exc is None else "error")
 
     def result(self, gid: int, timeout: float | None = None):
         """Block until request `gid` completes; returns the engine's request
@@ -419,10 +456,17 @@ class Runtime:
         return out
 
     def stats(self) -> dict:
-        """Per-engine merged engine + telemetry + supervision snapshot."""
+        """Per-engine merged engine + telemetry + supervision snapshot.
+
+        NON-destructive: engines expose ``snapshot(reset=False)`` (unified
+        schema, see ``Engine.snapshot``) so a stats scrape, a dashboard, and
+        the re-tuner can read concurrently without racing each other's
+        rolling windows.  Engines without the seam fall back to their
+        ``stats()``."""
         with self._lock, self._submit_lock:
             now = self._clock()
-            return {name: {**eng.stats(),
+            return {name: {**(eng.snapshot(reset=False)
+                              if hasattr(eng, "snapshot") else eng.stats()),
                            "telemetry": self.telemetry[name].snapshot(now),
                            "supervision": self._sup_snapshot(name)}
                     for name, eng in self._engines.items()}
@@ -454,6 +498,12 @@ class Runtime:
                 continue
             self._gid_of[(name, local)] = gid
             self._local_of[gid] = (name, local)
+            if self.obs.enabled:
+                self.obs.instant("admit", track="requests",
+                                 parent=self._req_spans.get(gid),
+                                 cat="request",
+                                 args={"gid": gid, "engine": name,
+                                       "local_id": local})
             # Arrival telemetry stamps HERE, on successful ingest, with the
             # request's submit timestamp — a rejected or shed request must
             # not inflate the EWMA arrival rate into bogus re-tunes.
@@ -495,6 +545,15 @@ class Runtime:
             sup.state = "serving"
             sup.awaiting_completion = True
             sup.log(self._clock(), f"recovered replay={replayed}")
+            if self.obs.enabled:
+                self.obs.instant("recovered", track="supervisor",
+                                 parent=sup.cycle_sid, cat="supervision",
+                                 args={"engine": name, "replayed": replayed})
+                self.obs.end(sup.cycle_sid,
+                             args={"outcome": "recovered",
+                                   "replayed": replayed})
+                sup.cycle_sid = None
+                self.obs.count("recoveries", 1, engine=name)
             t = self.telemetry[name]
             t.recoveries += 1
             t.replayed += int(replayed or 0)
@@ -507,6 +566,21 @@ class Runtime:
         sup.last_error = exc
         sup.log(now, f"fault {getattr(exc, 'kind', type(exc).__name__)}")
         self.telemetry[name].faults += 1
+        if self.obs.enabled:
+            # One "fault-cycle" span per quarantine episode on the
+            # supervisor track: fault -> quarantined -> recovered|dead ride
+            # as child instants; a repeated fault during an open cycle
+            # (recovery itself failed) extends the same span.
+            if sup.cycle_sid is None:
+                sup.cycle_sid = self.obs.begin(
+                    "fault-cycle", track="supervisor", cat="supervision",
+                    args={"engine": name})
+            self.obs.instant(
+                "fault", track="supervisor", parent=sup.cycle_sid,
+                cat="supervision",
+                args={"engine": name,
+                      "kind": getattr(exc, "kind", type(exc).__name__)})
+            self.obs.count("faults", 1, engine=name)
         eng = self._engines[name]
         if not supports_recover(eng) or sup.restarts >= pol.max_restarts:
             self._kill(name, exc)
@@ -517,6 +591,12 @@ class Runtime:
         sup.state = "quarantined"
         sup.until = now + backoff
         sup.log(now, f"quarantined backoff={backoff:.3g}s")
+        if self.obs.enabled:
+            self.obs.instant("quarantined", track="supervisor",
+                             parent=sup.cycle_sid, cat="supervision",
+                             args={"engine": name, "backoff_s": backoff,
+                                   "restarts": sup.restarts})
+            self.obs.count("quarantines", 1, engine=name)
 
     def _kill(self, name: str, exc: BaseException) -> None:
         """Remove `name` from service permanently and fail its futures."""
@@ -524,6 +604,14 @@ class Runtime:
         sup.state = "dead"
         sup.last_error = exc
         sup.log(self._clock(), "dead")
+        if self.obs.enabled:
+            self.obs.instant("dead", track="supervisor",
+                             parent=sup.cycle_sid, cat="supervision",
+                             args={"engine": name, "error": repr(exc)})
+            if sup.cycle_sid is not None:
+                self.obs.end(sup.cycle_sid, args={"outcome": "dead"})
+                sup.cycle_sid = None
+            self.obs.count("deaths", 1, engine=name)
         err = flt.EngineDeadError(
             f"engine {name!r} removed from service: {exc}", engine=name)
         err.__cause__ = exc
@@ -600,7 +688,15 @@ class Runtime:
         if units > 0 and self._timed_gen.get(name) != prog_gen:
             self._timed_gen[name] = prog_gen  # compile step: warm, don't record
             units = 0
-        t.on_step(busy, eng.in_flight, step_s=step_s, units=units)
+        # Planner drift: adSCH's modeled step cost divided down to one step
+        # unit, against the measured wall-clock EWMA the same on_step call
+        # updates — telemetry exposes the ratio as plan_drift_ratio.
+        units_per_step = getattr(eng, "sweeps_per_step", None) or \
+            getattr(eng, "decode_per_step", None)
+        modeled = step_cost_seconds(eng) / units_per_step \
+            if units_per_step else None
+        t.on_step(busy, eng.in_flight, step_s=step_s, units=units,
+                  modeled_unit_s=modeled)
         for req in finished:
             t.on_complete(getattr(req, "latency_s", 0.0) or 0.0)
             gid = self._gid_of.pop((name, req.id), None)
@@ -661,10 +757,19 @@ class Runtime:
               "measured_step_unit_s": t.step_unit_s()}
         if policy.candidates is not None:
             kw["candidates"] = policy.candidates
-        new_slots = retune_slots(self._engines[name], rate, **kw)
-        if new_slots is not None:
-            self._engines[name].resize(new_slots)
-            t.retunes += 1
+        with self.obs.span("retune", track="supervisor", cat="supervision",
+                           args={"engine": name, "rate_rps": rate,
+                                 "tuned_rate_rps": t.tuned_rate}) as sp:
+            new_slots = retune_slots(self._engines[name], rate, **kw)
+            if new_slots is not None:
+                self._engines[name].resize(new_slots)
+                t.retunes += 1
+                self.obs.count("retunes", 1, engine=name)
+            if sp is not None:
+                sp.args.update(
+                    new_slots=new_slots,
+                    measured_unit_s=t.step_unit_s(),
+                    plan_drift_ratio=t.plan_drift_ratio())
         t.mark_tuned(rate)  # re-anchor either way; drift is vs the decision
 
     def _loop(self, gen: int) -> None:
@@ -741,6 +846,14 @@ class Runtime:
             sup.state = "dead"
             sup.last_error = err
             sup.log(self._clock(), "wedged")
+            if self.obs.enabled:
+                self.obs.instant("wedged", track="supervisor",
+                                 parent=sup.cycle_sid, cat="supervision",
+                                 args={"engine": name, "wedged_s": age})
+                if sup.cycle_sid is not None:
+                    self.obs.end(sup.cycle_sid, args={"outcome": "wedged"})
+                    sup.cycle_sid = None
+                self.obs.count("deaths", 1, engine=name)
             self.telemetry[name].faults += 1
             self._fail_engine_futures(name, err)
             # the wedged thread still holds the OLD lock; the replacement

@@ -15,7 +15,7 @@ from __future__ import annotations
 import dataclasses
 import time
 
-from repro.engine.engine import rolling_latency_ms
+from repro.engine.engine import LAT_WINDOW_CAP, rolling_latency_ms
 
 
 class ArrivalEstimator:
@@ -117,6 +117,10 @@ class EngineTelemetry:
     # repro.engine.sharding.autotune.retune_slots).
     _step_unit_s: float | None = None
     step_alpha: float = 0.2
+    # adSCH's modeled device-seconds per step unit for the engine's CURRENT
+    # program (refreshed every busy step — resizes change it); the
+    # denominator of plan_drift_ratio.
+    modeled_unit_s: float | None = None
     _lat_window: list = dataclasses.field(default_factory=list)
     _lat_sum: float = 0.0
 
@@ -125,9 +129,12 @@ class EngineTelemetry:
         self.arrivals.observe(now, n=n)
 
     def on_step(self, busy_fraction: float, queue_depth: int, *,
-                step_s: float | None = None, units: int = 0) -> None:
+                step_s: float | None = None, units: int = 0,
+                modeled_unit_s: float | None = None) -> None:
         """``step_s``/``units``: measured wall seconds of this engine step
-        and the step units (sweeps) it executed — skipped for idle steps."""
+        and the step units (sweeps) it executed — skipped for idle steps.
+        ``modeled_unit_s``: adSCH's modeled seconds for one such unit, the
+        planner-drift denominator."""
         self.steps += 1
         self.queue_depth = queue_depth
         self.utilization += self.util_alpha * (
@@ -137,14 +144,30 @@ class EngineTelemetry:
             self._step_unit_s = per if self._step_unit_s is None else \
                 (1 - self.step_alpha) * self._step_unit_s + \
                 self.step_alpha * per
+        if modeled_unit_s is not None:
+            self.modeled_unit_s = float(modeled_unit_s)
 
     def step_unit_s(self) -> float | None:
         """Measured wall seconds per step unit (None until a busy step)."""
         return self._step_unit_s
 
+    def plan_drift_ratio(self) -> float | None:
+        """Measured / modeled seconds per step unit — how far reality has
+        drifted from adSCH's plan for this engine (>1: the plan is
+        optimistic, e.g. interpret-mode kernels or host overhead; <1:
+        pessimistic).  None until both sides exist.  This is the
+        PR 5 unit-mismatch lesson made continuously observable: the re-tuner
+        already refuses to mix modeled and measured cost bases, and this
+        ratio is the standing measurement of how wrong mixing them would
+        be."""
+        if self._step_unit_s is None or not self.modeled_unit_s:
+            return None
+        return self._step_unit_s / self.modeled_unit_s
+
     def on_complete(self, latency_s: float) -> None:
         self.completed += 1
         self._lat_window.append(float(latency_s))
+        del self._lat_window[:-LAT_WINDOW_CAP]
         self._lat_sum += float(latency_s)
 
     def mark_tuned(self, rate: float) -> None:
@@ -155,11 +178,17 @@ class EngineTelemetry:
         return should_retune(self.arrivals.rate(now), self.tuned_rate,
                              threshold)
 
-    def snapshot(self, now: float | None = None) -> dict:
-        """Counters + ROLLING latency percentiles (window resets per call,
-        with the same percentile definition as ``Engine.stats`` — the two
-        are reported side by side); all-time totals keep accumulating."""
-        lats, self._lat_window = self._lat_window, []
+    def snapshot(self, now: float | None = None, *,
+                 reset: bool = False) -> dict:
+        """Counters + ROLLING latency percentiles (same percentile
+        definition as ``Engine.snapshot`` — the two are reported side by
+        side); all-time totals keep accumulating.  Non-destructive by
+        default (the window is capped at ``LAT_WINDOW_CAP``, so undrained
+        readers stay bounded); ``reset=True`` drains the window for
+        interval-over-interval reporting."""
+        lats = self._lat_window
+        if reset:
+            self._lat_window = []
         return {
             "submitted": self.submitted,
             "completed": self.completed,
@@ -175,6 +204,8 @@ class EngineTelemetry:
             "arrival_rate_rps": self.arrivals.rate(now),
             "tuned_rate_rps": self.tuned_rate,
             "step_unit_s": self._step_unit_s,
+            "modeled_unit_s": self.modeled_unit_s,
+            "plan_drift_ratio": self.plan_drift_ratio(),
             "window_completed": len(lats),
             **rolling_latency_ms(lats),
             "latency_mean_all_ms": (self._lat_sum / self.completed * 1e3
