@@ -1,0 +1,144 @@
+"""Structural regression gate over BENCH_traffic.json baselines.
+
+CI quality gates on wall-clock collapse on shared runners; the numbers that
+ARE stable are the structural counters of the deterministic replay leg
+(``benchmarks.traffic.replay_structural``): how many sweeps the factorizer
+engines executed, how many psums each sweep costs, whether the fused Pallas
+sweep path was taken, how many prefill/decode dispatches the LM served and
+how many KV bytes they touched.  Those counters change only when the CODE
+changes — scheduler policy, batching, kernel eligibility — which is exactly
+the regression class worth gating.
+
+``compare()`` diffs a fresh run's structural section against a committed
+baseline envelope under per-counter tolerances: structure-per-unit counters
+(``psums_per_sweep``, ``pallas_calls_per_sweep``, ``units_per_step``,
+``prefill_dispatches`` — one per request, by construction) must match
+exactly; volume counters (``sweeps_total``, ``steps``, ``tokens_total``,
+``decode_dispatches``, ``kv_bytes_touched``) get a small relative band so a
+benign scheduling tweak doesn't block CI while a 2x blowup still fails.
+Wall-clock fields are deliberately never inspected.
+
+``python -m benchmarks.check_regression --baseline BENCH_traffic.json``
+re-runs the deterministic leg with the baseline's own recorded config and
+exits non-zero on any violation; ``--fresh other.json`` diffs two committed
+envelopes instead (no replay — pure file comparison, used by the tests).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: counter -> max |fresh - base| / max(|base|, 1) before it's a violation.
+#: 0.0 means exact.  Anything absent from this table is reported-only.
+DEFAULT_TOLERANCES = {
+    "psums_per_sweep": 0.0,
+    "pallas_calls_per_sweep": 0.0,
+    "units_per_step": 0.0,
+    "prefill_dispatches": 0.0,
+    "sweeps_total": 0.05,
+    "steps": 0.05,
+    "tokens_total": 0.05,
+    "decode_dispatches": 0.05,
+    "kv_bytes_touched": 0.05,
+}
+
+
+def compare(baseline: dict, fresh: dict,
+            tolerances: dict | None = None) -> list[str]:
+    """Diff two per-engine structural-counter dicts; returns violation
+    strings (empty list == gate passes).  Engines or counters present in
+    the baseline but missing from the fresh run are violations — a counter
+    silently disappearing is itself a structural change."""
+    tol = dict(DEFAULT_TOLERANCES)
+    if tolerances:
+        tol.update(tolerances)
+    out = []
+    for eng in sorted(baseline):
+        if eng not in fresh:
+            out.append(f"{eng}: engine missing from fresh run")
+            continue
+        base_c, fresh_c = baseline[eng], fresh[eng]
+        for key in sorted(base_c):
+            if key not in tol:
+                continue  # reported-only counter
+            if key not in fresh_c:
+                out.append(f"{eng}.{key}: missing from fresh run "
+                           f"(baseline {base_c[key]})")
+                continue
+            b, f = base_c[key], fresh_c[key]
+            lim = tol[key]
+            drift = abs(f - b) / max(abs(b), 1)
+            if drift > lim:
+                out.append(
+                    f"{eng}.{key}: {b} -> {f} "
+                    f"(drift {drift:.3f} > tol {lim})")
+    return out
+
+
+def _load(path: str) -> dict:
+    with open(path) as fp:
+        env = json.load(fp)
+    sv = env.get("schema_version")
+    if sv != 1:
+        raise SystemExit(f"{path}: unsupported bench schema_version {sv!r}")
+    if "structural" not in env.get("result", {}):
+        raise SystemExit(f"{path}: no result.structural section "
+                         f"(benchmark={env.get('benchmark')!r})")
+    return env
+
+
+def _fresh_structural(cfg: dict) -> dict:
+    """Re-run the deterministic leg with the baseline's recorded config."""
+    from benchmarks import traffic
+
+    trace = traffic.make_trace(cfg["kind"], seed=cfg["seed"],
+                               events=cfg["events"],
+                               duration_s=cfg["duration_s"])
+    problems = traffic.build_problems(cfg["seed"])
+    return traffic.replay_structural(trace, problems)["structural"]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="BENCH_traffic.json")
+    ap.add_argument("--fresh", default=None,
+                    help="diff this envelope instead of re-running the "
+                         "deterministic replay leg")
+    ap.add_argument("--tolerance", action="append", default=[],
+                    metavar="COUNTER=REL",
+                    help="override one counter's relative tolerance")
+    args = ap.parse_args(argv)
+
+    base_env = _load(args.baseline)
+    overrides = {}
+    for spec in args.tolerance:
+        key, _, val = spec.partition("=")
+        overrides[key] = float(val)
+
+    if args.fresh is not None:
+        fresh_env = _load(args.fresh)
+        if fresh_env.get("config") != base_env.get("config"):
+            print(f"config mismatch: baseline {base_env.get('config')} "
+                  f"vs fresh {fresh_env.get('config')}")
+            return 1
+        fresh = fresh_env["result"]["structural"]
+    else:
+        fresh = _fresh_structural(base_env["config"])
+
+    violations = compare(base_env["result"]["structural"], fresh, overrides)
+    if violations:
+        print(f"REGRESSION: {len(violations)} structural counter(s) "
+              f"drifted vs {args.baseline}")
+        for v in violations:
+            print(f"  {v}")
+        return 1
+    n = sum(len([k for k in c if k in DEFAULT_TOLERANCES])
+            for c in base_env["result"]["structural"].values())
+    print(f"ok: {n} gated structural counters within tolerance "
+          f"of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -6,11 +6,18 @@ end-to-end benchmarks (Figs. 15/16/18/19, Tab. X), and timing helpers.
 """
 from __future__ import annotations
 
+import json
+import subprocess
 import time
 
 import jax
 
 from repro.core import scheduler as sch
+
+#: Bumped whenever the BENCH_*.json envelope changes shape.  The envelope
+#: (not the per-benchmark ``result`` payload) is what check_regression.py
+#: and trend tooling parse, so it is versioned explicitly.
+BENCH_SCHEMA_VERSION = 1
 
 # (panels per task, vector dim, factorizer iters, symbolic circconvs per task)
 TASKS = {
@@ -93,3 +100,51 @@ def row(benchmark: str, name: str, us_per_call, derived) -> dict:
     return {"benchmark": benchmark, "name": name,
             "us_per_call": "" if us_per_call is None else round(us_per_call, 3),
             "derived": derived}
+
+
+def _git_commit() -> str | None:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10, check=True).stdout.strip()
+    except Exception:
+        return None  # detached artifact dirs, no git in container, ...
+
+
+def bench_envelope(benchmark: str, result, *, workload: str | None = None,
+                   timing_mode: str | None = None,
+                   config: dict | None = None) -> dict:
+    """The unified BENCH_*.json envelope: one schema for every benchmark so
+    ``check_regression.py`` and trend tooling parse them all the same way.
+
+    Provenance stamps (schema version, git commit, backend/device, jax
+    version) answer "which code, which machine produced this number" —
+    without them a committed baseline is unfalsifiable.  ``timing_mode``
+    records whether wall-clock numbers are meaningful ("cpu-interpret"
+    means: only structural counters are transferable; see ROADMAP)."""
+    dev = jax.devices()[0]
+    return {
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "benchmark": benchmark,
+        "workload": workload if workload is not None else benchmark,
+        "timing_mode": timing_mode
+        or f"{jax.default_backend()}-{'interpret' if dev.platform == 'cpu' else 'native'}",
+        "provenance": {
+            "git_commit": _git_commit(),
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": dev.device_kind,
+            "device_count": jax.device_count(),
+        },
+        "config": config or {},
+        "result": result,
+    }
+
+
+def write_bench(path: str, benchmark: str, result, **kwargs) -> dict:
+    """Assemble the envelope and write it; returns the envelope dict."""
+    env = bench_envelope(benchmark, result, **kwargs)
+    with open(path, "w") as f:
+        json.dump(env, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return env

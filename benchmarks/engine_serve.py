@@ -26,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench
 from repro import engine as eng_mod
 from repro.core import factorizer as fz
 from repro.models import nvsa
@@ -197,25 +197,23 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    out = {
-        "workload": ("NVSA attribute factorization queries (1.4-sigma query "
-                     "noise), F=3, M=(5,6,10) padded, D=1024, Gauss-Seidel + "
-                     "score noise 0.3 + restarts, max_iters=60"),
-        "timing_mode": ("CPU wall clock — NOT TPU-predictive; the sweep "
-                        "counts (codebook HBM passes) are the transferable "
-                        "metric"),
-        "result": bench(),
-        "fused_serving": {
-            "workload": ("LVRF row decoding (bipolar MAP, deterministic "
-                         "Jacobi sweeps), F=3, M=10, D=2048, N=256 slots — "
-                         "fused Pallas sweep vs two-pass jnp sweep, "
-                         "bit-identical trajectories asserted"),
-            "result": bench_fused(),
-        },
-    }
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_engine.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    out = write_bench(
+        path, "engine_serve",
+        {"serving": bench(),
+         "fused_serving": {
+             "workload": ("LVRF row decoding (bipolar MAP, deterministic "
+                          "Jacobi sweeps), F=3, M=10, D=2048, N=256 slots — "
+                          "fused Pallas sweep vs two-pass jnp sweep, "
+                          "bit-identical trajectories asserted"),
+             "result": bench_fused(),
+         }},
+        workload=("NVSA attribute factorization queries (1.4-sigma query "
+                  "noise), F=3, M=(5,6,10) padded, D=1024, Gauss-Seidel + "
+                  "score noise 0.3 + restarts, max_iters=60"),
+        timing_mode=("CPU wall clock — NOT TPU-predictive; the sweep "
+                     "counts (codebook HBM passes) are the transferable "
+                     "metric"))
     print(json.dumps(out, indent=1))
 
 

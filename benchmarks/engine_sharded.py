@@ -160,10 +160,14 @@ def main() -> None:
         dp, mp, placement = int(sys.argv[2]), int(sys.argv[3]), sys.argv[4]
         print(json.dumps(_worker(dp, mp, placement)))
         return
-    out = bench()
+    from benchmarks.common import write_bench  # lazy like run(): the
+    # --worker subprocess path above must not pay the jax-importing helpers
+    res = bench()
     path = os.path.join(ROOT, "BENCH_engine_sharded.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    out = write_bench(
+        path, "engine_sharded",
+        {"setup": res["setup"], "configs": res["configs"]},
+        workload=res["workload"], timing_mode=res["timing_mode"])
     print(json.dumps(out, indent=1))
 
 

@@ -23,7 +23,7 @@ import os
 import jax
 import numpy as np
 
-from benchmarks.common import row, timeit
+from benchmarks.common import row, timeit, write_bench
 from repro.core import factorizer as fz
 from repro.core import vsa
 from repro.kernels.resonator_step import kernel as rsk
@@ -94,15 +94,12 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    out = {
-        "workload": "bipolar fused resonator, F=3, M=16, D=512, max_iters=30",
-        "timing_mode": ("Pallas interpret on CPU — wall time is NOT "
-                        "TPU-predictive; the HBM-pass and iteration metrics are"),
-        "entries": bench(),
-    }
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_factorizer.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    out = write_bench(
+        path, "factorizer_batch", bench(),
+        workload="bipolar fused resonator, F=3, M=16, D=512, max_iters=30",
+        timing_mode=("Pallas interpret on CPU — wall time is NOT "
+                     "TPU-predictive; the HBM-pass and iteration metrics are"))
     print(json.dumps(out, indent=1))
 
 

@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench
 from repro import engine as eng_mod
 from repro import runtime as rt
 from repro.models import lvrf
@@ -209,21 +209,19 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    out = {
-        "workload": (f"{N_GOOD} LVRF row decodes + {N_JUNK} junk queries "
-                     "(pinned keys, burn to max_iters) through one "
-                     "supervised Runtime"),
-        "timing_mode": ("CPU wall clock — NOT TPU-predictive; the "
-                        "transferable signals are the recovery-cost "
-                        "structure (backoff + rebuild/recompile dominate) "
-                        "and the deadline tradeoff: tight budgets convert "
-                        "a recovery cycle into structured misses, a "
-                        "recovery-covering budget restores attainment"),
-        "result": bench(),
-    }
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_faults.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    out = write_bench(
+        path, "fault_recovery", bench(),
+        workload=(f"{N_GOOD} LVRF row decodes + {N_JUNK} junk queries "
+                  "(pinned keys, burn to max_iters) through one "
+                  "supervised Runtime"),
+        timing_mode=("CPU wall clock — NOT TPU-predictive; the "
+                     "transferable signals are the recovery-cost "
+                     "structure (backoff + rebuild/recompile dominate) "
+                     "and the deadline tradeoff: tight budgets convert "
+                     "a recovery cycle into structured misses, a "
+                     "recovery-covering budget restores attainment"),
+        config={"n_good": N_GOOD, "n_junk": N_JUNK})
     print(json.dumps(out, indent=1))
 
 

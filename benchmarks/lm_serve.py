@@ -28,7 +28,7 @@ import time
 
 import jax
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench
 from repro import runtime as rt
 from repro.configs.registry import ARCHS
 from repro.lm.paging import PagedConfig
@@ -124,23 +124,23 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    out = {
-        "workload": (f"{len(PROMPT_LENS)} greedy LM requests (prompts "
-                     f"{list(PROMPT_LENS)} tokens, {GEN} generated each) on "
-                     f"the llama3.2 smoke config, {SLOTS} slots, "
-                     f"max_len={MAX_LEN}: contiguous KV cache vs paged "
-                     f"block-table pool (block={BLOCK}, "
-                     f"prefill_chunk={CHUNK})"),
-        "timing_mode": ("CPU wall clock with the Pallas flash-decode kernel "
-                        "in interpret mode — NOT TPU-predictive; the "
-                        "dispatch counts, KV bytes per decode step and "
-                        "modeled adSCH step costs are the transferable "
-                        "signal"),
-        "result": bench(),
-    }
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_lm.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    out = write_bench(
+        path, "lm_serve", bench(),
+        workload=(f"{len(PROMPT_LENS)} greedy LM requests (prompts "
+                  f"{list(PROMPT_LENS)} tokens, {GEN} generated each) on "
+                  f"the llama3.2 smoke config, {SLOTS} slots, "
+                  f"max_len={MAX_LEN}: contiguous KV cache vs paged "
+                  f"block-table pool (block={BLOCK}, "
+                  f"prefill_chunk={CHUNK})"),
+        timing_mode=("CPU wall clock with the Pallas flash-decode kernel "
+                     "in interpret mode — NOT TPU-predictive; the "
+                     "dispatch counts, KV bytes per decode step and "
+                     "modeled adSCH step costs are the transferable "
+                     "signal"),
+        config={"prompt_lens": list(PROMPT_LENS), "gen": GEN,
+                "slots": SLOTS, "max_len": MAX_LEN, "block": BLOCK,
+                "prefill_chunk": CHUNK})
     print(json.dumps(out, indent=1))
 
 

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import row
+from benchmarks.common import row, write_bench
 from repro import engine as eng_mod
 from repro import runtime as rt
 from repro.configs.registry import ARCHS
@@ -184,21 +184,20 @@ def run() -> list[dict]:
 
 
 def main() -> None:
-    out = {
-        "workload": ("mixed online traffic through one Runtime: "
-                     f"{R_NVSA} NVSA factorization tasks (1.4-sigma query "
-                     f"noise) + {R_LVRF} LVRF row decodes + {R_LM} LM greedy "
-                     f"generations x {LM_GEN} tokens (llama3.2 smoke config), "
-                     "vs the same engines drained synchronously one after "
-                     "another"),
-        "timing_mode": ("CPU wall clock — NOT TPU-predictive; the p50 ratios "
-                        "(no workload queues behind a foreign engine's full "
-                        "drain) are the transferable signal"),
-        "result": bench(),
-    }
     path = os.path.join(os.path.dirname(__file__), "..", "BENCH_runtime.json")
-    with open(path, "w") as f:
-        json.dump(out, f, indent=1)
+    out = write_bench(
+        path, "runtime_serve", bench(),
+        workload=("mixed online traffic through one Runtime: "
+                  f"{R_NVSA} NVSA factorization tasks (1.4-sigma query "
+                  f"noise) + {R_LVRF} LVRF row decodes + {R_LM} LM greedy "
+                  f"generations x {LM_GEN} tokens (llama3.2 smoke config), "
+                  "vs the same engines drained synchronously one after "
+                  "another"),
+        timing_mode=("CPU wall clock — NOT TPU-predictive; the p50 ratios "
+                     "(no workload queues behind a foreign engine's full "
+                     "drain) are the transferable signal"),
+        config={"r_nvsa": R_NVSA, "r_lvrf": R_LVRF, "r_lm": R_LM,
+                "lm_gen": LM_GEN})
     print(json.dumps(out, indent=1))
 
 

@@ -34,15 +34,19 @@ from __future__ import annotations
 
 import os
 
-from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               quantile)
 from repro.obs.recorder import DEFAULT_CLOCK, NULL, NullRecorder, Recorder
+from repro.obs.report import attribution, render_json, render_text
+from repro.obs.slo import SLOTarget, SLOTracker
 from repro.obs.spans import Span, SpanStore, validate
 from repro.obs.trace import to_chrome_trace, write_chrome_trace
 
 __all__ = [
     "Counter", "DEFAULT_CLOCK", "Gauge", "Histogram", "MetricsRegistry",
-    "NULL", "NullRecorder", "Recorder", "Span", "SpanStore", "maybe_obs",
-    "to_chrome_trace", "validate", "write_chrome_trace",
+    "NULL", "NullRecorder", "Recorder", "SLOTarget", "SLOTracker", "Span",
+    "SpanStore", "attribution", "maybe_obs", "quantile", "render_json",
+    "render_text", "to_chrome_trace", "validate", "write_chrome_trace",
 ]
 
 

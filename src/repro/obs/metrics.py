@@ -77,25 +77,53 @@ class Histogram:
         self.max = v if self.max is None else max(self.max, v)
 
     def percentile(self, q: float) -> float | None:
-        if not self.count:
-            return None
-        target = q / 100.0 * self.count
-        seen = 0
-        for i, c in enumerate(self.buckets):
-            seen += c
-            if seen >= target:
-                lo = self.edges[i - 1] if i >= 1 else (self.min or 0.0)
-                hi = self.edges[i] if i < len(self.edges) else \
-                    (self.max or lo)
-                frac = (target - (seen - c)) / max(c, 1)
-                return lo + frac * (hi - lo)
-        return self.max
+        return _bucket_quantile(self.count, self.edges, self.buckets,
+                                self.min, self.max, q)
 
     def summary(self) -> dict:
+        """Snapshot dict.  Includes the raw ``edges``/``buckets`` arrays so a
+        consumer of a SNAPSHOT (not the live instrument) can compute any
+        quantile via :func:`quantile` — the SLO layer needs real p95/p99 from
+        scraped data, not just the pre-baked pair."""
         return {"count": self.count,
                 "mean": self.total / self.count if self.count else None,
                 "min": self.min, "max": self.max,
-                "p50": self.percentile(50), "p99": self.percentile(99)}
+                "p50": self.percentile(50), "p95": self.percentile(95),
+                "p99": self.percentile(99),
+                "edges": list(self.edges), "buckets": list(self.buckets)}
+
+
+def _bucket_quantile(count, edges, buckets, mn, mx, q: float) -> float | None:
+    """Shared quantile math over (edges, buckets): walk to the bucket holding
+    the q-th observation and interpolate linearly inside it, clamping the end
+    buckets to the observed min/max so quantiles never exceed the data
+    range."""
+    if not count:
+        return None
+    target = q / 100.0 * count
+    seen = 0
+    for i, c in enumerate(buckets):
+        seen += c
+        if seen >= target:
+            lo = edges[i - 1] if i >= 1 else (mn or 0.0)
+            hi = edges[i] if i < len(edges) else (mx if mx is not None else lo)
+            lo = lo if mn is None else max(lo, mn)
+            hi = hi if mx is None else min(hi, mx)
+            frac = (target - (seen - c)) / max(c, 1)
+            return lo + frac * max(hi - lo, 0.0)
+    return mx
+
+
+def quantile(snapshot: dict, q: float) -> float | None:
+    """Quantile from a histogram SNAPSHOT — the ``summary()`` dict as found in
+    ``MetricsRegistry.snapshot()`` (or a Chrome trace's ``otherData.metrics``).
+    Same interpolation as the live instrument's ``percentile``; returns None
+    for an empty histogram.  ``q`` is in percent (95 -> p95)."""
+    if not 0 <= q <= 100:
+        raise ValueError(f"q must be a percentage in [0, 100], got {q}")
+    return _bucket_quantile(snapshot["count"], snapshot["edges"],
+                            snapshot["buckets"], snapshot["min"],
+                            snapshot["max"], q)
 
 
 def _key(name: str, labels: dict) -> tuple:

@@ -163,7 +163,7 @@ class Runtime:
     def __init__(self, *, clock=None, idle_sleep_s: float = 1e-3,
                  max_pending: int | None = None,
                  watchdog_s: float | None = 180.0,
-                 failure: FailurePolicy | None = None, obs=None):
+                 failure: FailurePolicy | None = None, obs=None, slo=None):
         # Observability: explicit recorder > REPRO_OBS=1 env seam > NULL
         # (free).  register() rebinds default-built engines onto this
         # recorder so the whole stack traces on ONE monotonic clock; the
@@ -182,6 +182,12 @@ class Runtime:
         self._watchdog_s = watchdog_s
         self._default_failure = failure if failure is not None \
             else FailurePolicy()
+        # Per-class SLO attainment (obs/slo.py).  Host arithmetic like
+        # telemetry — always on, independent of the recorder, so the
+        # zero-overhead obs contract is untouched.  ``slo`` is a ready
+        # SLOTracker or a {class: SLOTarget|seconds} target map.
+        self.slo = slo if isinstance(slo, obs_mod.SLOTracker) \
+            else obs_mod.SLOTracker(slo)
         self._engines: dict = {}
         self._policies: dict = {}
         self._failure: dict = {}  # name -> FailurePolicy
@@ -196,6 +202,7 @@ class Runtime:
         self._steps_since_check: dict = {}
         self._pending: deque = deque()  # (name, gid, payload, kwargs, t_sub)
         self._futures: dict = {}  # gid -> Future
+        self._req_class: dict = {}  # gid -> (class label, submit time)
         self._req_spans: dict = {}  # gid -> open request-lifecycle span id
         self._gid_of: dict = {}  # (name, engine-local id) -> gid
         self._local_of: dict = {}  # gid -> (name, engine-local id)
@@ -224,6 +231,10 @@ class Runtime:
         overrides the runtime's default :class:`FailurePolicy` for it."""
         if name in self._engines:
             raise ValueError(f"engine {name!r} already registered")
+        if name == "slo":
+            raise ValueError(
+                "engine name 'slo' is reserved: Runtime.stats() exposes the "
+                "per-class SLO snapshot under that key")
         engine = flt.maybe_chaos_wrap(engine)  # CI transparency run hook
         # Engines built with the defaults join this runtime's recorder under
         # their registered name — one recorder, one clock, one trace for the
@@ -331,7 +342,7 @@ class Runtime:
     # -- submission / results ----------------------------------------------
 
     def submit(self, engine: str, payload, *, deadline_s: float | None = None,
-               **kwargs) -> int:
+               class_: str | None = None, **kwargs) -> int:
         """Enqueue a request for `engine`; returns a runtime-global id
         immediately (the stepper thread performs the actual engine.submit).
 
@@ -341,6 +352,11 @@ class Runtime:
         via the engine's preemption-safe ``cancel``.  Submits can fail fast
         with :class:`ShedError` (bounded pending queue full) or
         :class:`EngineDeadError` (the engine was removed from service).
+
+        ``class_`` labels the request for per-class SLO accounting
+        (``stats()["slo"]``, span args, latency histograms); it defaults to
+        the engine's ``engine_kind`` ("factorizer", "lm", ...) so unlabeled
+        traffic still aggregates into meaningful classes.
         """
         if engine not in self._engines:
             raise KeyError(f"unknown engine {engine!r}; registered: "
@@ -350,6 +366,8 @@ class Runtime:
         if self._stopped:
             raise RuntimeError("runtime is stopped; nothing would serve "
                                "this request")
+        cls = class_ if class_ is not None else \
+            getattr(self._engines[engine], "engine_kind", engine)
         if self._sup[engine].state == "dead":
             raise flt.EngineDeadError(
                 f"engine {engine!r} was removed from service",
@@ -357,8 +375,10 @@ class Runtime:
         if self._max_pending is not None and \
                 len(self._pending) >= self._max_pending:
             # fail-fast overload shedding; shed requests never stamp the
-            # arrival estimator (they were not admitted)
+            # arrival estimator (they were not admitted).  No future exists
+            # for a shed request, so the SLO tracker is told here.
             self.telemetry[engine].shed += 1
+            self.slo.on_shed(cls)
             raise flt.ShedError(
                 f"pending queue full ({self._max_pending}); request shed",
                 engine=engine)
@@ -368,9 +388,11 @@ class Runtime:
             gid = self._next_gid
             self._next_gid += 1
             self._futures[gid] = fut
+            self._req_class[gid] = (cls, now)
             if deadline_s is not None:
                 heapq.heappush(self._deadlines,
                                (now + float(deadline_s), gid, engine))
+        self.slo.on_submit(cls)
         if self.obs.enabled:
             # The request-lifecycle span: opened at submit, closed by the
             # future's done-callback (whichever thread resolves it — result,
@@ -378,9 +400,12 @@ class Runtime:
             # by time on the shared clock, not by parentage.
             self._req_spans[gid] = self.obs.begin(
                 "request", track="requests", cat="request",
-                args={"gid": gid, "engine": engine})
-            fut.add_done_callback(
-                lambda f, gid=gid: self._close_req_span(gid, f))
+                args={"gid": gid, "engine": engine, "class": cls})
+        # The done-callback routes the outcome (ok / deadline / failure)
+        # into the SLO tracker and closes the request span — on whichever
+        # thread resolves the future.  Always attached: SLO accounting is
+        # live even with the NULL recorder.
+        fut.add_done_callback(lambda f, gid=gid: self._on_resolved(gid, f))
         self._pending.append((engine, gid, payload, kwargs, now))
         self._wake.set()
         # Close the race with a concurrently-dying or concurrently-stopping
@@ -393,15 +418,33 @@ class Runtime:
                 else "runtime stopped with the request unfinished"))
         return gid
 
-    def _close_req_span(self, gid: int, fut: Future) -> None:
+    def _on_resolved(self, gid: int, fut: Future) -> None:
+        """Future done-callback: one choke point for outcome accounting.
+        Runs on whichever thread resolved the future (stepper, deadline
+        expiry, stop()); everything here is host-side scalar work."""
+        cls, t_sub = self._req_class.pop(gid, (None, None))
+        exc = fut.exception()
+        if cls is not None:
+            if exc is None:
+                lat = self._clock() - t_sub
+                self.slo.on_complete(cls, lat)
+                if self.obs.enabled:
+                    # per-class latency histogram; SLOTracker keeps exact
+                    # windows, this feeds the scrapeable metrics snapshot
+                    self.obs.observe("request_latency_s", lat,
+                                     **{"class": cls})
+            elif isinstance(exc, flt.DeadlineExceededError):
+                self.slo.on_deadline_miss(cls)
+            else:
+                self.slo.on_failure(cls)
         sid = self._req_spans.pop(gid, None)
         if sid is None:
             return
-        exc = fut.exception()
         self.obs.end(sid, args={
             "outcome": "ok" if exc is None else type(exc).__name__})
         self.obs.count("resolved", 1,
-                       outcome="ok" if exc is None else "error")
+                       outcome="ok" if exc is None else "error",
+                       **({"class": cls} if cls is not None else {}))
 
     def result(self, gid: int, timeout: float | None = None):
         """Block until request `gid` completes; returns the engine's request
@@ -465,11 +508,16 @@ class Runtime:
         ``stats()``."""
         with self._lock, self._submit_lock:
             now = self._clock()
-            return {name: {**(eng.snapshot(reset=False)
-                              if hasattr(eng, "snapshot") else eng.stats()),
-                           "telemetry": self.telemetry[name].snapshot(now),
-                           "supervision": self._sup_snapshot(name)}
-                    for name, eng in self._engines.items()}
+            out = {name: {**(eng.snapshot(reset=False)
+                             if hasattr(eng, "snapshot") else eng.stats()),
+                          "telemetry": self.telemetry[name].snapshot(now),
+                          "supervision": self._sup_snapshot(name)}
+                   for name, eng in self._engines.items()}
+        # Per-class SLO attainment under the reserved top-level key
+        # (register() refuses an engine named "slo"); computed outside the
+        # engine locks — the tracker has its own.
+        out["slo"] = self.slo.snapshot()
+        return out
 
     def _sup_snapshot(self, name: str) -> dict:
         sup = self._sup[name]
@@ -697,6 +745,19 @@ class Runtime:
             if units_per_step else None
         t.on_step(busy, eng.in_flight, step_s=step_s, units=units,
                   modeled_unit_s=modeled)
+        if self.obs.enabled:
+            # Continuous planner-drift surfacing: every telemetry tick
+            # refreshes the per-engine gauges, not just retune instants.
+            # modeled/measured land separately so the attribution report
+            # can integrate span-derived drift over the whole trace.
+            drift = t.plan_drift_ratio()
+            if drift is not None:
+                self.obs.gauge("plan_drift", drift, engine=name)
+            if modeled is not None:
+                self.obs.gauge("modeled_unit_s", modeled, engine=name)
+            mu = t.step_unit_s()
+            if mu is not None:
+                self.obs.gauge("measured_unit_s", mu, engine=name)
         for req in finished:
             t.on_complete(getattr(req, "latency_s", 0.0) or 0.0)
             gid = self._gid_of.pop((name, req.id), None)
@@ -780,12 +841,28 @@ class Runtime:
                     if self._gen != gen:
                         return
                     now = self._clock()
-                    self._ingest()
+                    if self._pending:
+                        # admission is real host work (engine submit() does
+                        # device puts): span it so a burst's admission cost
+                        # is attributable to the requests it delays.  The
+                        # guard keeps idle loop passes from emitting spans.
+                        with self.obs.span("ingest", track="runtime",
+                                           cat="runtime"):
+                            self._ingest()
                     self._expire_deadlines(now)
                     self._service_quarantine(now)
                     name = self._pick()
                     if name is not None:
-                        self._step_one(name, gen)
+                        # dispatch span: covers the engine step PLUS the
+                        # stepper's own host work around it (telemetry,
+                        # gauges, future resolution) so the attribution
+                        # report can account for near-100% of a request's
+                        # service window.  NULL's span() is a no-op
+                        # singleton, so the untraced path stays free.
+                        with self.obs.span("dispatch", track="runtime",
+                                           cat="runtime",
+                                           args={"engine": name}):
+                            self._step_one(name, gen)
                         self._maybe_retune(name)
                 if name is None:
                     self._wake.wait(self._idle_sleep_s)

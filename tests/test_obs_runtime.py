@@ -103,8 +103,17 @@ def test_runtime_binds_engines_onto_one_recorder(lvrf_setup):
     t_close = max(s.t1 for s in reqs_spans)
     assert any(t_open <= s.t0 and s.t1 <= t_close for s in by["step"])
     snap = rec.metrics.snapshot()
-    assert snap["resolved"] == {"outcome=ok": 3}
+    # resolved counters carry the request class; unlabeled submits default
+    # to the engine kind
+    assert snap["resolved"] == {"class=factorizer,outcome=ok": 3}
     assert snap["submitted"]["engine=lvrf"] == 3
+    # planner drift is surfaced continuously as gauges, not only at retunes
+    assert "plan_drift" in snap and "engine=lvrf" in snap["plan_drift"]
+    assert snap["modeled_unit_s"]["engine=lvrf"] > 0
+    # per-class latency histogram feeds snapshot-side quantiles
+    lat = snap["request_latency_s"]["class=factorizer"]
+    assert lat["count"] == 3
+    assert obs.quantile(lat, 95) is not None
     # and it all exports as ONE trace: every track present, JSON-clean
     evs = rec.to_chrome_trace()["traceEvents"]
     tracks = {e["args"]["name"] for e in evs if e["name"] == "thread_name"}
@@ -201,5 +210,90 @@ def test_failed_requests_close_spans_with_error(lvrf_setup):
     assert spans[doomed].args["outcome"] == "DeadlineExceededError"
     assert spans[ok].args["outcome"] == "ok"
     snap = rec.metrics.snapshot()
-    assert snap["resolved"] == {"outcome=ok": 1, "outcome=error": 1}
+    assert snap["resolved"] == {"class=factorizer,outcome=ok": 1,
+                                "class=factorizer,outcome=error": 1}
     assert obs.validate(rec.spans.snapshot()) == []
+    # the SLO tracker routed both outcomes under the default class
+    slo = r.stats()["slo"]["factorizer"]
+    assert slo["completed"] == 1 and slo["deadline_missed"] == 1
+    assert slo["deadline_miss_rate"] == 0.5
+
+
+def test_request_classes_flow_into_spans_metrics_and_slo(lvrf_setup):
+    """submit(class_=...) labels the request span, the resolved counter,
+    the latency histogram, and the per-class SLO snapshot; unlabeled
+    requests default to the engine kind."""
+    spec, cfg, atoms = lvrf_setup
+    _, good, _ = _lvrf_queries(cfg, atoms, n_good=3, n_junk=0, seed=41)
+    keys = jax.random.split(jax.random.PRNGKey(19), 3)
+    rec = obs.Recorder()
+    r = rt.Runtime(obs=rec, failure=FAST_FAILURE,
+                   slo={"interactive": obs.SLOTarget(30.0, percentile=95)})
+    r.register("lvrf", engine.Engine(spec, slots=2, sweeps_per_step=2))
+    with r:
+        a = r.submit("lvrf", good[0], keys=keys[0][None],
+                     class_="interactive")
+        b = r.submit("lvrf", good[1], keys=keys[1][None],
+                     class_="interactive")
+        c = r.submit("lvrf", good[2], keys=keys[2][None])  # default class
+        for g in (a, b, c):
+            r.result(g, timeout=RESULT_TIMEOUT_S)
+        slo = r.stats()["slo"]
+    assert set(slo) == {"interactive", "factorizer"}
+    assert slo["interactive"]["submitted"] == 2
+    assert slo["interactive"]["completed"] == 2
+    assert slo["interactive"]["latency_p95_s"] > 0
+    # the generous target is attained on a healthy run
+    assert slo["interactive"]["attainment"] == 1.0
+    assert slo["interactive"]["attained"] is True
+    # untargeted default class still reports percentiles, no attainment
+    assert slo["factorizer"]["completed"] == 1
+    assert slo["factorizer"]["attainment"] is None
+    spans = {s.args["gid"]: s for s in rec.spans.snapshot()
+             if s.name == "request"}
+    assert spans[a].args["class"] == "interactive"
+    assert spans[c].args["class"] == "factorizer"
+    snap = rec.metrics.snapshot()
+    assert snap["resolved"] == {"class=interactive,outcome=ok": 2,
+                                "class=factorizer,outcome=ok": 1}
+    assert snap["request_latency_s"]["class=interactive"]["count"] == 2
+
+
+def test_class_labels_are_free_under_null_recorder(lvrf_setup):
+    """Zero-overhead contract extended to the class-label path: with the
+    NULL recorder, submitting with class_ labels records nothing, the SLO
+    tracker still counts (host arithmetic, like telemetry), and results
+    are bit-equal to an untraced, unlabeled run."""
+    spec, cfg, atoms = lvrf_setup
+    vals, good, _ = _lvrf_queries(cfg, atoms, n_good=2, n_junk=0, seed=43)
+    keys = jax.random.split(jax.random.PRNGKey(23), 2)
+
+    def run(class_=None, obs_rec=None):
+        eng = engine.Engine(spec, slots=2, sweeps_per_step=2)
+        r = rt.Runtime(obs=obs_rec, failure=FAST_FAILURE)
+        r.register("lvrf", eng)
+        with r:
+            gids = [r.submit("lvrf", good[i], keys=keys[i][None],
+                             **({"class_": class_} if class_ else {}))
+                    for i in range(2)]
+            out = [r.result(g, timeout=RESULT_TIMEOUT_S) for g in gids]
+        return r, [req.result for req in out]
+
+    def assert_bit_equal(xs, ys):
+        for x, y in zip(xs, ys):
+            assert set(x) == set(y)
+            for k in x:
+                np.testing.assert_array_equal(np.asarray(x[k]),
+                                              np.asarray(y[k]))
+
+    r_plain, res_plain = run()
+    r_null, res_null = run(class_="interactive")  # NULL recorder, labeled
+    rec = obs.Recorder()
+    r_obs, res_obs = run(class_="interactive", obs_rec=rec)
+    assert_bit_equal(res_plain, res_null)
+    assert_bit_equal(res_plain, res_obs)
+    # NULL recorder recorded nothing, but SLO accounting still ran
+    assert r_null.obs is obs.NULL
+    assert r_null.stats()["slo"]["interactive"]["completed"] == 2
+    assert rec.metrics.snapshot()["resolved"] == {
+        "class=interactive,outcome=ok": 2}

@@ -453,8 +453,10 @@ def test_runtime_mixed_traffic_bit_equal_acceptance(lvrf_setup):
         for _ in range(5):
             ref.step()
         assert req.result["tokens"] == ref.generated[0][1:6]
-    # every engine reports through the merged stats path
+    # every engine reports through the merged stats path, plus the
+    # per-class SLO section (register() reserves the "slo" name)
     st = r.stats()
-    assert set(st) == {"nvsa", "lvrf", "lm"}
+    assert set(st) == {"nvsa", "lvrf", "lm", "slo"}
     assert st["lm"]["tokens_total"] == 10
     assert st["lvrf"]["telemetry"]["retunes"] >= 1
+    assert st["slo"]["lm"]["completed"] == 2

@@ -1,0 +1,200 @@
+"""Trace-driven load harness + structural regression gate.
+
+Four contracts:
+
+  * **trace generation is a pure function of (kind, seed)** — replaying the
+    generator yields the identical arrival sequence, and each kind's shape
+    invariants hold (sorted, inside [0, duration], adversarial spike);
+  * **the structural replay leg is deterministic** — two full replays of
+    the same trace produce the identical submit sequence, bit-equal result
+    digest, and equal gated counters (this is what makes the counters
+    gateable at all);
+  * **the regression gate** passes a baseline against itself, fails on
+    injected drift (both exact counters and volume counters beyond
+    tolerance), and ``main()`` returns the right exit codes on envelope
+    files — the CI contract;
+  * **the live runtime leg meets the attribution coverage bar**: on seeded
+    mixed nvsa+lvrf+lm traffic under chaos, queue-wait + attributed service
+    phases account for >= 95% of EVERY request's wall time, and the SLO
+    snapshot sees all three classes.
+"""
+import json
+
+import pytest
+
+from benchmarks import check_regression, traffic
+
+
+@pytest.fixture(scope="module")
+def problems():
+    return traffic.build_problems(seed=0)
+
+
+# ---------------------------------------------------------------------------
+# trace generation
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", traffic.TRACE_KINDS)
+def test_trace_is_deterministic_and_bounded(kind):
+    a = traffic.make_trace(kind, seed=5, events=40, duration_s=2.0)
+    b = traffic.make_trace(kind, seed=5, events=40, duration_s=2.0)
+    assert a == b
+    assert len(a) == 40
+    assert all(0.0 <= ev.t <= 2.0 for ev in a)
+    assert [ev.t for ev in a] == sorted(ev.t for ev in a)
+    assert {ev.engine for ev in a} <= {"nvsa", "lvrf", "lm"}
+    c = traffic.make_trace(kind, seed=6, events=40, duration_s=2.0)
+    assert a != c  # seed actually reaches the draw
+
+
+def test_trace_kinds_differ():
+    traces = {k: traffic.make_trace(k, seed=1, events=32)
+              for k in traffic.TRACE_KINDS}
+    assert traces["bursty"] != traces["diurnal"]
+    # the adversarial trace lands half its events in one instant on the
+    # heaviest engine — the worst case the SLO tracker must survive
+    adv = traces["adversarial"]
+    spike = [ev for ev in adv if ev.t == pytest.approx(0.5)]
+    assert len(spike) >= len(adv) // 2
+    assert len({ev.engine for ev in spike}) == 1
+
+
+# ---------------------------------------------------------------------------
+# structural replay determinism
+# ---------------------------------------------------------------------------
+
+def test_structural_replay_is_deterministic(problems):
+    tr = traffic.make_trace("bursty", seed=2, events=12, duration_s=0.5)
+    a = traffic.replay_structural(tr, problems)
+    b = traffic.replay_structural(tr, problems)
+    assert a["submit_seq"] == b["submit_seq"]
+    assert a["digest"] == b["digest"]  # results bit-equal, not just close
+    assert a["structural"] == b["structural"]
+    assert a["steps"] == b["steps"]
+    # the counters the gate relies on actually moved
+    assert a["structural"]["nvsa"]["sweeps_total"] > 0
+    assert a["structural"]["lm"]["decode_dispatches"] > 0
+    assert a["structural"]["lm"]["kv_bytes_touched"] > 0
+
+
+# ---------------------------------------------------------------------------
+# regression gate
+# ---------------------------------------------------------------------------
+
+BASE = {
+    "nvsa": {"steps": 20, "sweeps_total": 68, "units_per_step": 4,
+             "psums_per_sweep": 0, "pallas_calls_per_sweep": 0},
+    "lm": {"steps": 21, "tokens_total": 48, "prefill_dispatches": 30,
+           "decode_dispatches": 42, "kv_bytes_touched": 322560,
+           "units_per_step": 2},
+}
+
+
+def test_compare_passes_identity_and_small_volume_drift():
+    assert check_regression.compare(BASE, BASE) == []
+    fresh = json.loads(json.dumps(BASE))
+    fresh["nvsa"]["sweeps_total"] = 70  # ~3% < 5% tolerance
+    assert check_regression.compare(BASE, fresh) == []
+
+
+def test_compare_fails_on_injected_drift():
+    fresh = json.loads(json.dumps(BASE))
+    fresh["nvsa"]["sweeps_total"] = 140      # 2x volume blowup
+    fresh["nvsa"]["psums_per_sweep"] = 1     # exact counter moved
+    fresh["lm"]["prefill_dispatches"] = 31   # exact counter moved
+    out = check_regression.compare(BASE, fresh)
+    assert len(out) == 3
+    assert any("sweeps_total" in v for v in out)
+    assert any("psums_per_sweep" in v for v in out)
+    assert any("prefill_dispatches" in v for v in out)
+
+
+def test_compare_flags_missing_engine_and_counter():
+    fresh = {"nvsa": {k: v for k, v in BASE["nvsa"].items()
+                      if k != "sweeps_total"}}
+    out = check_regression.compare(BASE, fresh)
+    assert any("lm: engine missing" in v for v in out)
+    assert any("nvsa.sweeps_total: missing" in v for v in out)
+
+
+def _envelope(structural, config):
+    return {"schema_version": 1, "benchmark": "traffic", "config": config,
+            "result": {"structural": structural}}
+
+
+def test_gate_main_exit_codes(tmp_path, capsys):
+    cfg = {"kind": "bursty", "seed": 0, "events": 48, "duration_s": 1.0,
+           "chaos": True}
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_envelope(BASE, cfg)))
+
+    fresh_ok = tmp_path / "ok.json"
+    fresh_ok.write_text(json.dumps(_envelope(BASE, cfg)))
+    assert check_regression.main(["--baseline", str(base),
+                                  "--fresh", str(fresh_ok)]) == 0
+
+    drifted = json.loads(json.dumps(BASE))
+    drifted["lm"]["kv_bytes_touched"] *= 2
+    fresh_bad = tmp_path / "bad.json"
+    fresh_bad.write_text(json.dumps(_envelope(drifted, cfg)))
+    assert check_regression.main(["--baseline", str(base),
+                                  "--fresh", str(fresh_bad)]) == 1
+    assert "kv_bytes_touched" in capsys.readouterr().out
+
+    # tolerance override can unblock a known benign drift
+    assert check_regression.main(
+        ["--baseline", str(base), "--fresh", str(fresh_bad),
+         "--tolerance", "kv_bytes_touched=1.5"]) == 0
+
+    # config mismatch is apples-to-oranges, always a failure
+    other_cfg = dict(cfg, events=16)
+    fresh_other = tmp_path / "other.json"
+    fresh_other.write_text(json.dumps(_envelope(BASE, other_cfg)))
+    assert check_regression.main(["--baseline", str(base),
+                                  "--fresh", str(fresh_other)]) == 1
+
+
+def test_gate_rejects_unknown_schema(tmp_path):
+    bad = tmp_path / "bad_schema.json"
+    bad.write_text(json.dumps({"schema_version": 99, "result": {}}))
+    with pytest.raises(SystemExit):
+        check_regression.main(["--baseline", str(bad)])
+
+
+# ---------------------------------------------------------------------------
+# live runtime leg: SLO + attribution coverage (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+def test_runtime_replay_meets_coverage_and_slo(problems, tmp_path):
+    tr = traffic.make_trace("bursty", seed=0, events=16, duration_s=0.5)
+    out = traffic.replay_runtime(tr, problems, chaos_seed=1)
+    rep = out["report"]
+
+    # >= 95% of EVERY request's wall time is attributed (queue wait +
+    # service phases) — the coverage contract of the attribution report
+    assert rep["coverage"]["requests"] == 16
+    for row in rep["requests"]:
+        assert row["coverage"] >= 0.95, (row["gid"], row["phases"])
+    assert all(b in traffic.obs.report.BUCKETS
+               for row in rep["requests"] for b in row["phases"])
+
+    # per-class SLO attainment: all submitted classes present, resolved,
+    # and attained under the (deliberately generous) default targets
+    slo = out["slo"]
+    kinds = {ev.engine for ev in tr}
+    assert kinds <= set(slo)
+    for k in kinds:
+        assert slo[k]["completed"] + slo[k]["failed"] \
+            + slo[k]["deadline_missed"] == slo[k]["submitted"]
+        assert slo[k]["attainment"] is not None
+        assert slo[k]["latency_p95_s"] is not None
+
+    # chaos injected exactly one lvrf fault: the report shows the episode
+    lvrf_phases = rep["engines"]["lvrf"]["phase_s"]
+    assert "replay" in lvrf_phases or "quarantine_backoff" in lvrf_phases
+
+    # the chrome trace written from the same recorder is loadable JSON
+    path = tmp_path / "trace.json"
+    out["recorder"].write_chrome_trace(str(path))
+    trace = json.loads(path.read_text())
+    assert any(e.get("name") == "dispatch" for e in trace["traceEvents"])
