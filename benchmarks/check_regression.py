@@ -41,6 +41,15 @@ DEFAULT_TOLERANCES = {
     "tokens_total": 0.05,
     "decode_dispatches": 0.05,
     "kv_bytes_touched": 0.05,
+    # fleet-controller decision counters (overload leg, per class): the
+    # replay is fully deterministic, so any drift means the admission /
+    # preemption / brownout / rebalance policy itself changed — gate exact
+    "admitted": 0.0,
+    "shed": 0.0,
+    "degraded": 0.0,
+    "preempted": 0.0,
+    "rebalances": 0.0,
+    "brownouts": 0.0,
 }
 
 
@@ -89,14 +98,12 @@ def _load(path: str) -> dict:
 
 
 def _fresh_structural(cfg: dict) -> dict:
-    """Re-run the deterministic leg with the baseline's recorded config."""
+    """Re-run the deterministic legs with the baseline's recorded config
+    (including the fleet-controlled overload leg when the baseline
+    recorded one — older envelopes without it replay as before)."""
     from benchmarks import traffic
 
-    trace = traffic.make_trace(cfg["kind"], seed=cfg["seed"],
-                               events=cfg["events"],
-                               duration_s=cfg["duration_s"])
-    problems = traffic.build_problems(cfg["seed"])
-    return traffic.replay_structural(trace, problems)["structural"]
+    return traffic.structural_suite(cfg)["structural"]
 
 
 def main(argv=None) -> int:

@@ -23,6 +23,11 @@ same trace through TWO legs with different guarantees:
   and the Chrome trace.  Its wall-clock numbers are REPORTED, never
   gated (CPU/interpret-mode timing is not predictive).
 
+A third, fleet-controlled structural leg replays an ``overload`` trace
+(sustained arrivals above capacity, mixed priority classes) under
+:func:`overload_fleet` policy, so the controller's admission / preemption /
+brownout / rebalance decision counters are deterministic and gated too.
+
 ``python -m benchmarks.traffic`` writes the unified BENCH envelope
 (structural counters + SLO attainment + attribution summary) and the
 Chrome trace; ``--events/--seed/--kind`` scale it for CI smoke runs.
@@ -50,7 +55,7 @@ from repro.nn import transformer as T
 from repro.runtime import faults as flt
 from repro.runtime.protocol import step_cost_seconds
 
-TRACE_KINDS = ("bursty", "diurnal", "adversarial")
+TRACE_KINDS = ("bursty", "diurnal", "adversarial", "overload")
 
 #: Engine mix weights: nvsa factorizations and lvrf row decodes dominate,
 #: LM generations are the heavy minority class (one costs many steps).
@@ -59,22 +64,35 @@ DEFAULT_MIX = (("nvsa", 3), ("lvrf", 4), ("lm", 1))
 LM_GEN = 8  # tokens generated per LM request
 _KIND_SALT = {k: i + 1 for i, k in enumerate(TRACE_KINDS)}
 
+#: Priority-class mix for ``overload`` traces: a small latency-sensitive
+#: minority swamped by best-effort bulk — the shape fleet admission
+#: control exists for.
+OVERLOAD_CLASSES = (("interactive", 1), ("best_effort", 3))
+
+#: Engine mix for ``overload`` traces: weighted toward the multi-step LM
+#: engine so live rows actually span control ticks — the precondition for
+#: priority preemption (single-step symbolic requests never hold a slot
+#: long enough to be worth preempting).
+OVERLOAD_MIX = (("nvsa", 2), ("lvrf", 3), ("lm", 3))
+
 
 @dataclasses.dataclass(frozen=True)
 class Arrival:
     """One trace event: at trace-time ``t`` submit payload ``idx`` of
-    ``engine``'s pool."""
+    ``engine``'s pool.  ``cls`` is the priority class (empty for the
+    classless trace kinds — replays then fall back to the engine name)."""
 
     t: float
     engine: str
     idx: int
+    cls: str = ""
 
 
 # -- trace generation ------------------------------------------------------
 
 
 def make_trace(kind: str, *, seed: int = 0, events: int = 48,
-               duration_s: float = 1.0, mix=DEFAULT_MIX) -> list[Arrival]:
+               duration_s: float = 1.0, mix=None) -> list[Arrival]:
     """Seeded arrival trace of `events` arrivals over ``[0, duration_s)``.
 
     * ``bursty`` — Poisson-ish bursts separated by idle gaps (the paper's
@@ -83,10 +101,16 @@ def make_trace(kind: str, *, seed: int = 0, events: int = 48,
       trace window), sampled by thinning;
     * ``adversarial`` — a steady trickle plus one synchronized spike of
       the heaviest engine's requests at mid-trace (worst case for a
-      virtual-time scheduler: one class tries to monopolize the stepper).
+      virtual-time scheduler: one class tries to monopolize the stepper);
+    * ``overload`` — sustained arrivals at a rate the fleet cannot keep up
+      with, tagged with mixed priority classes (``OVERLOAD_CLASSES``): the
+      input the fleet controller's admission/preemption/brownout policies
+      are exercised (and gated) against.
     """
     if kind not in TRACE_KINDS:
         raise ValueError(f"unknown trace kind {kind!r}; one of {TRACE_KINDS}")
+    if mix is None:
+        mix = OVERLOAD_MIX if kind == "overload" else DEFAULT_MIX
     rng = np.random.default_rng([seed, _KIND_SALT[kind]])
     names = [n for n, _ in mix]
     w = np.asarray([float(x) for _, x in mix])
@@ -114,11 +138,15 @@ def make_trace(kind: str, *, seed: int = 0, events: int = 48,
             if rng.uniform(0, 1.9) < rate:
                 times.append(cand)
         times = np.sort(np.asarray(times))
-    else:  # adversarial
+    elif kind == "adversarial":
         n_spike = events // 2
         trickle = np.sort(rng.uniform(0, duration_s, events - n_spike))
         spike = np.full(n_spike, duration_s * 0.5)
         times = np.sort(np.concatenate([trickle, spike]))
+    else:  # overload: sustained pressure, no idle gaps to drain into
+        gaps = rng.exponential(duration_s / events, size=events)
+        times = np.cumsum(gaps)
+        times = times / times.max() * duration_s * 0.95
 
     engines = [names[i] for i in rng.choice(len(names), size=events, p=w)]
     if kind == "adversarial":
@@ -127,10 +155,18 @@ def make_trace(kind: str, *, seed: int = 0, events: int = 48,
         heavy = names[-1]
         engines = [heavy if abs(t - duration_s * 0.5) < 1e-12 else e
                    for t, e in zip(times, engines)]
+    classes = [""] * events
+    if kind == "overload":
+        # class draw happens AFTER the engine draw and only on this branch,
+        # so the older kinds' rng streams (and digests) are untouched
+        cnames = [c for c, _ in OVERLOAD_CLASSES]
+        cw = np.asarray([float(x) for _, x in OVERLOAD_CLASSES])
+        classes = [cnames[j] for j in
+                   rng.choice(len(cnames), size=events, p=cw / cw.sum())]
     counts: dict[str, int] = {n: 0 for n in names}
     out = []
-    for t, e in zip(times, engines):
-        out.append(Arrival(float(t), e, counts[e]))
+    for t, e, c in zip(times, engines, classes):
+        out.append(Arrival(float(t), e, counts[e], c))
         counts[e] += 1
     return out
 
@@ -238,7 +274,7 @@ def _result_digest(results: list) -> str:
 
 
 def replay_structural(trace, problems, *, steps_per_s: float | None = None,
-                      engines=None) -> dict:
+                      engines=None, fleet=None) -> dict:
     """Single-threaded discrete-event replay of `trace`.
 
     Virtual time advances by ``1 / steps_per_s`` per engine step (service
@@ -246,6 +282,15 @@ def replay_structural(trace, problems, *, steps_per_s: float | None = None,
     engine choice is the Runtime's SFQ rule (min virtual time, virtual
     time advanced by modeled step cost / backlog, start-time clamped).
     Everything is deterministic: no threads, no wall clock, pinned keys.
+
+    ``fleet`` (a :class:`repro.runtime.FleetPolicy` or bound controller)
+    puts the same :class:`~repro.runtime.FleetController` the threaded
+    Runtime uses in the loop: every arrival goes through ``admit`` (shed
+    arrivals never reach an engine; degraded ones get trimmed budgets;
+    admitted ones carry their class priority), and ``control`` runs on the
+    virtual clock after every step — so admission/preemption/brownout/
+    rebalance decision counters are exactly reproducible and regression-
+    gateable alongside the engine counters.
     """
     kinds = engines if engines is not None else \
         tuple(dict.fromkeys(ev.engine for ev in trace))
@@ -254,23 +299,47 @@ def replay_structural(trace, problems, *, steps_per_s: float | None = None,
     if steps_per_s is None:
         dur = max((ev.t for ev in trace), default=0.0) or 1.0
         steps_per_s = 3.0 * len(trace) / dur
+    ctrl = None
+    cls_of: dict[tuple[str, int], str] = {}
+    if fleet is not None:
+        ctrl = fleet if isinstance(fleet, rt.FleetController) \
+            else rt.FleetController(fleet)
+        units = {n: int(getattr(e, "sweeps_per_step", 0)
+                        or getattr(e, "decode_per_step", 0) or 1)
+                 for n, e in engs.items()}
+        # one engine step == 1/steps_per_s virtual seconds, so the modeled
+        # per-unit cost is that, split across the step's units
+        ctrl.bind(engs,
+                  unit_s_fn=lambda n: (1.0 / steps_per_s) / units[n],
+                  class_of=lambda n, rid: cls_of.get((n, rid)))
     vt = {n: 0.0 for n in engs}
     vclock = 0.0
     was_busy: set = set()
     now = 0.0
     i = 0
     submit_seq: list[tuple[str, int]] = []
+    shed_seq: list[tuple[str, int]] = []
     submitted: dict[str, dict] = {n: {} for n in engs}  # local id -> idx
     results: list = []
     steps = 0
     while i < len(trace) or any(e.in_flight for e in engs.values()):
         while i < len(trace) and trace[i].t <= now:
             ev = trace[i]
+            i += 1
             payload, kw = _submit(engs, problems, ev)
+            if ctrl is not None:
+                cls = ev.cls or ev.engine
+                decision = ctrl.admit(ev.engine, cls, now=now)
+                if decision.action == "shed":
+                    shed_seq.append((ev.engine, ev.idx))
+                    continue
+                kw = decision.apply(kw)
+                kw["priority"] = decision.priority
             rid = engs[ev.engine].submit(payload, **kw)
+            if ctrl is not None:
+                cls_of[(ev.engine, rid)] = cls
             submitted[ev.engine][rid] = ev.idx
             submit_seq.append((ev.engine, ev.idx))
-            i += 1
         busy = [n for n, e in engs.items() if e.in_flight]
         if not busy:
             if i < len(trace):
@@ -290,14 +359,21 @@ def replay_structural(trace, problems, *, steps_per_s: float | None = None,
         backlog = engs[pick].in_flight + len(finished)
         vt[pick] += step_cost_seconds(engs[pick]) / max(1, backlog)
         now += 1.0 / steps_per_s
+        if ctrl is not None:
+            ctrl.control(now=now)
         for req in finished:
             idx = submitted[pick].pop(req.id)
             res = req.result if not hasattr(req, "tokens") else req.tokens
             results.append((pick, idx, res))
     counters = structural_counters(engs)
-    return {"submit_seq": submit_seq, "results": results,
-            "digest": _result_digest(results), "steps": steps,
-            "steps_per_s": steps_per_s, "structural": counters}
+    out = {"submit_seq": submit_seq, "results": results,
+           "digest": _result_digest(results), "steps": steps,
+           "steps_per_s": steps_per_s, "structural": counters}
+    if ctrl is not None:
+        counters.update(ctrl.structural_counters())
+        out["shed_seq"] = shed_seq
+        out["fleet"] = ctrl.snapshot()
+    return out
 
 
 def structural_counters(engines: dict) -> dict:
@@ -323,6 +399,63 @@ def structural_counters(engines: dict) -> dict:
                     1 if (e.spec.cfg is not None
                           and fz.fused_sweep_eligible(e.spec.cfg)) else 0,
             }
+    return out
+
+
+def overload_fleet(steps_per_s: float) -> rt.FleetPolicy:
+    """The fleet policy the overload leg (and the CI overload scenario)
+    runs under.  Thresholds are denominated in virtual step times
+    (``1 / steps_per_s``) so the same policy works at any replay speed:
+    best-effort work degrades past ~2 queued steps of estimated wait, is
+    shed past ~4, and a sustained ~2.5-step backlog browns the fleet out;
+    interactive work is never shed and never trimmed, and preempts
+    best-effort rows out of live slots."""
+    step_v = 1.0 / steps_per_s
+    return rt.FleetPolicy(
+        classes=(
+            rt.PriorityClass("interactive", priority=0),
+            rt.PriorityClass("best_effort", priority=3,
+                             admit_wait_s=4 * step_v,
+                             degrade_wait_s=2 * step_v,
+                             preemptible=True, degradable=True),
+        ),
+        default_class="best_effort",
+        max_preempt_per_tick=2,
+        rebalance_every=8, rebalance_step=1, rebalance_ratio=1.5,
+        min_slots=2,
+        brownout=rt.BrownoutPolicy(enter_wait_s=2.5 * step_v,
+                                   exit_wait_s=1 * step_v,
+                                   enter_ticks=2, exit_ticks=2,
+                                   lm_token_cap=4),
+    )
+
+
+def structural_suite(cfg: dict) -> dict:
+    """Every deterministic counter the regression gate inspects, from one
+    recorded config: the base trace replay plus — when the config carries
+    an ``overload`` sub-dict — the fleet-controlled overload leg, whose
+    per-engine counters and per-class fleet decision counters are merged
+    in under ``overload_*`` keys.  Shared by ``bench()`` and
+    ``check_regression._fresh_structural`` so the gate re-runs exactly
+    what the baseline recorded."""
+    problems = build_problems(cfg["seed"])
+    trace = make_trace(cfg["kind"], seed=cfg["seed"], events=cfg["events"],
+                       duration_s=cfg["duration_s"])
+    base = replay_structural(trace, problems)
+    out = {"structural": dict(base["structural"]), "steps": base["steps"],
+           "steps_per_s": base["steps_per_s"], "digest": base["digest"]}
+    ov = cfg.get("overload")
+    if ov:
+        otrace = make_trace("overload", seed=ov["seed"],
+                            events=ov["events"],
+                            duration_s=ov["duration_s"])
+        sps = float(ov["steps_per_s"])
+        res = replay_structural(otrace, problems, steps_per_s=sps,
+                                fleet=overload_fleet(sps))
+        for name, ctrs in res["structural"].items():
+            out["structural"][f"overload_{name}"] = ctrs
+        out["overload_digest"] = res["digest"]
+        out["overload_fleet"] = res["fleet"]
     return out
 
 
@@ -402,12 +535,25 @@ def _attribution_summary(report: dict) -> dict:
     }
 
 
+def overload_config(seed: int, events: int, duration_s: float) -> dict:
+    """The overload leg's recorded replay config.  ``steps_per_s`` is
+    pinned at one virtual step per FOUR mean inter-arrival gaps — far
+    below what the batched multi-step requests need, i.e. sustained
+    overload — and written into the envelope so the gate replays at the
+    same speed."""
+    return {"seed": seed, "events": events, "duration_s": duration_s,
+            "steps_per_s": round(events / duration_s / 4.0, 6)}
+
+
 def bench(kind: str = "bursty", *, seed: int = 0, events: int = 48,
           duration_s: float = 1.0, time_scale: float = 1.0,
           chaos_seed: int | None = 1, trace_out: str | None = None) -> dict:
     trace = make_trace(kind, seed=seed, events=events, duration_s=duration_s)
     problems = build_problems(seed)
-    structural = replay_structural(trace, problems)
+    suite = structural_suite({
+        "kind": kind, "seed": seed, "events": events,
+        "duration_s": duration_s,
+        "overload": overload_config(seed, events, duration_s)})
     live = replay_runtime(trace, problems, time_scale=time_scale,
                           chaos_seed=chaos_seed)
     if trace_out:
@@ -418,10 +564,12 @@ def bench(kind: str = "bursty", *, seed: int = 0, events: int = 48,
     return {
         "trace": {"kind": kind, "seed": seed, "events": events,
                   "duration_s": duration_s, "per_engine": per_engine},
-        "structural": structural["structural"],
-        "structural_steps": structural["steps"],
-        "steps_per_s": structural["steps_per_s"],
-        "digest": structural["digest"],
+        "structural": suite["structural"],
+        "structural_steps": suite["steps"],
+        "steps_per_s": suite["steps_per_s"],
+        "digest": suite["digest"],
+        "overload": {"digest": suite["overload_digest"],
+                     "fleet": suite["overload_fleet"]},
         "slo": _slo_summary(live["slo"]),
         "attribution": _attribution_summary(live["report"]),
         "runtime_wall_s": round(live["wall_s"], 3),
@@ -456,10 +604,14 @@ def main(argv=None) -> int:
                      "deterministic leg are the gated signal"),
         config={"kind": args.kind, "seed": args.seed, "events": args.events,
                 "duration_s": args.duration_s,
+                "overload": overload_config(args.seed, args.events,
+                                            args.duration_s),
                 "chaos": not args.no_chaos})
     print(json.dumps({"slo": env["result"]["slo"],
                       "coverage": env["result"]["attribution"]["coverage"],
-                      "digest": env["result"]["digest"]}, indent=1))
+                      "digest": env["result"]["digest"],
+                      "overload_fleet": env["result"]["overload"]["fleet"]},
+                     indent=1))
     return 0
 
 

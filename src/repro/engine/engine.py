@@ -117,6 +117,8 @@ class Request:
     meta: Any
     submit_time: float
     submit_sweep: int
+    priority: int = 0  # queue order: lower serves first (fleet classes)
+    iter_budget: int | None = None  # per-request cap on cfg.max_iters (brownout)
     rows: list = dataclasses.field(default_factory=list)  # per-query results
     result: Any = None  # postprocess output (or stacked FactorizerResult)
     factorization: Any = None  # stacked FactorizerResult over the k queries
@@ -262,13 +264,21 @@ class Engine:
 
     # -- request intake ----------------------------------------------------
 
-    def submit(self, queries, *, key=None, keys=None, meta=None) -> int:
+    def submit(self, queries, *, key=None, keys=None, meta=None,
+               priority: int = 0, max_iters: int | None = None) -> int:
         """Enqueue a request of one or more query vectors; returns its id.
 
         ``keys`` (one per query) pins the stochasticity streams — row i then
         reproduces ``factorize(queries[i], keys[i])`` exactly.  Otherwise
         keys derive from ``key`` (or the engine's internal chain).
+
+        ``priority`` orders the queue (lower serves first; FIFO within a
+        priority).  ``max_iters`` caps this request's resonator iteration
+        budget below ``cfg.max_iters`` — the fleet controller's brownout
+        trim: rows retire at the cap with whatever estimate they reached.
         """
+        if max_iters is not None and max_iters < 1:
+            raise ValueError(f"max_iters must be >= 1, got {max_iters}")
         queries = jnp.asarray(queries)
         if queries.ndim == 1:
             queries = queries[None]
@@ -278,7 +288,8 @@ class Engine:
                 self._key, key = jax.random.split(self._key)
             keys = jax.random.split(key, k)
         req = Request(self._next_id, queries, jnp.asarray(keys), meta,
-                      self._clock(), self.sweeps_total)
+                      self._clock(), self.sweeps_total,
+                      priority=int(priority), iter_budget=max_iters)
         req.rows = [None] * k
         self._next_id += 1
         for qi in range(k):
@@ -288,12 +299,27 @@ class Engine:
 
     # -- serving loop ------------------------------------------------------
 
+    def _pop_next(self):
+        """Queue discipline: lowest ``(priority, id, qi)`` first.  Request
+        ids are monotonic, so uniform priorities reduce to exact FIFO (the
+        deque stays (id, qi)-sorted under appends and the front re-queues
+        of resize/recover/preempt), and a re-queued row resumes ahead of
+        same-priority newcomers."""
+        best_i, best = 0, None
+        for i, (req, qi) in enumerate(self._queue):
+            k = (req.priority, req.id, qi)
+            if best is None or k < best:
+                best_i, best = i, k
+        item = self._queue[best_i]
+        del self._queue[best_i]
+        return item
+
     def _fill(self) -> None:
         fills = []
         for slot in range(self.slots):
             if self._owner[slot] is not None or not self._queue:
                 continue
-            req, qi = self._queue.popleft()
+            req, qi = self._pop_next()
             self._owner[slot] = (req, qi)
             fills.append((slot, req.queries[qi], req.keys[qi]))
         if not fills:
@@ -321,9 +347,18 @@ class Engine:
         done = np.asarray(self.state.done)
         iters = np.asarray(self.state.iters)
         max_it = self.spec.cfg.max_iters
+
+        def budget(req):
+            # Per-request brownout trim: retire at the smaller cap.  The
+            # device sweep still checks cfg.max_iters, so a trimmed row is
+            # retired host-side at burst granularity (slight overshoot,
+            # same as LM max_new_tokens trimming at burst boundaries).
+            b = req.iter_budget
+            return max_it if b is None else min(max_it, b)
+
         ripe = [s for s in range(self.slots)
                 if self._owner[s] is not None
-                and (done[s] or iters[s] >= max_it)]
+                and (done[s] or iters[s] >= budget(self._owner[s][0]))]
         if not ripe:
             return []
         res = jax.device_get(self._decode(self.qs, self.state))
@@ -483,8 +518,32 @@ class Engine:
                 sp.args["replayed"] = len(live)
         return len(live)
 
+    def preempt(self, request_id: int) -> int:
+        """Bit-safe preemption: park ``request_id``'s live slot rows (the
+        same ``done`` mask :meth:`cancel` uses) but RE-QUEUE the (request,
+        query) owners at the front instead of discarding them — the
+        re-queue-from-pinned-key contract :meth:`resize` shrink and
+        :meth:`recover` use.  A preempted row re-runs from scratch off its
+        pinned key once a slot frees, so its trajectory is bit-equal to an
+        undisturbed run, just later.  Queued rows are untouched (they are
+        already waiting).  Returns the number of rows re-queued.
+        """
+        parked = [s for s in range(self.slots)
+                  if self._owner[s] is not None
+                  and self._owner[s][0].id == request_id]
+        if not parked:
+            return 0
+        for s in reversed(parked):  # keep row order at the queue front
+            self._queue.appendleft(self._owner[s])
+            self._owner[s] = None
+        self.state = self.state._replace(
+            done=self.state.done.at[jnp.asarray(parked)].set(True))
+        self.obs.instant("preempt", track=self.obs_track, cat="engine",
+                         args={"request": request_id, "rows": len(parked)})
+        return len(parked)
+
     def cancel(self, request_id: int) -> bool:
-        """Preempt request `request_id`: drop its queued rows and park its
+        """Cancel request `request_id`: drop its queued rows and park its
         live slots (``done`` mask set, so the sweep freezes them and
         ``_fill`` treats them as free).  Slot reclamation only — other rows'
         trajectories are untouched (rows are independent; parking is the
@@ -530,6 +589,26 @@ class Engine:
     @property
     def in_flight(self) -> int:
         return sum(o is not None for o in self._owner) + len(self._queue)
+
+    def live_requests(self) -> dict:
+        """``{request_id: {"priority": p, "rows": n}}`` for slotted rows —
+        the fleet controller's preemption-victim view."""
+        out: dict = {}
+        for o in self._owner:
+            if o is not None:
+                d = out.setdefault(o[0].id,
+                                   {"priority": o[0].priority, "rows": 0})
+                d["rows"] += 1
+        return out
+
+    def queued_requests(self) -> dict:
+        """``{request_id: {"priority": p, "rows": n}}`` for queued rows."""
+        out: dict = {}
+        for req, _ in self._queue:
+            d = out.setdefault(req.id,
+                               {"priority": req.priority, "rows": 0})
+            d["rows"] += 1
+        return out
 
     def step_cost_s(self) -> float:
         """adSCH-modeled wall seconds of one ``step()`` burst (used by the

@@ -17,9 +17,13 @@ Outcome taxonomy mirrors ``runtime.faults``:
 
 - ``completed``  — future resolved with a result; latency = resolve - submit.
 - ``deadline_missed`` — future failed with ``DeadlineExceededError``.
-- ``shed``       — refused at submit (``ShedError``); no future exists, so
-  the Runtime reports it directly.
-- ``failed``     — any other exception (injected faults, dead engine).
+- ``shed``       — refused before service: at submit (``ShedError``,
+  dead-engine fast-fail, fleet admission shed — no future exists, the
+  Runtime reports it directly) or at ingest (dead engine, chaos submit
+  rejection — the future fails and ``on_rejected`` reclassifies the
+  submit).
+- ``failed``     — any other exception (injected faults, engine death
+  mid-service).
 
 Attainment is computed over a bounded rolling window of completion
 latencies (deadline misses count as *misses* in ``attainment`` too — a
@@ -139,6 +143,18 @@ class SLOTracker:
     def on_shed(self, class_: str) -> None:
         with self._lock:
             self._cls(class_).shed += 1
+
+    def on_rejected(self, class_: str) -> None:
+        """A request that WAS counted by ``on_submit`` got refused before
+        any service (dead engine discovered at ingest, chaos submit
+        rejection): move it from the submitted column to the shed column,
+        so ``shed_rate`` reflects every rejection flavor — not only the
+        pre-future paths that never reached ``on_submit``."""
+        with self._lock:
+            w = self._cls(class_)
+            w.shed += 1
+            if w.submitted > 0:
+                w.submitted -= 1
 
     def on_failure(self, class_: str) -> None:
         with self._lock:

@@ -22,7 +22,13 @@ the structural :class:`Steppable` protocol, with
     future resolves with a result or a structured
     :class:`~repro.runtime.faults.FaultError`, never a hang.  The seeded
     chaos harness lives in :mod:`repro.runtime.faults`
-    (:class:`FaultPlan` / :class:`ChaosEngine`).
+    (:class:`FaultPlan` / :class:`ChaosEngine`), and
+  * fleet-level overload policy under a :class:`FleetPolicy`
+    (``Runtime(fleet=...)``): priority-class admission control, bit-safe
+    preemption of low-priority live rows, a global slot budget rebalanced
+    between engines through ``resize``, and brownout modes that trim
+    best-effort budgets with a structured :class:`DegradedResult` marker
+    (:mod:`repro.runtime.fleet`).
 
 Typical use::
 
@@ -40,19 +46,25 @@ from repro.runtime.faults import (ChaosEngine, DeadlineExceededError,
                                   EngineDeadError, FaultError, FaultPlan,
                                   InjectedFault, ShedError, WedgedError,
                                   maybe_chaos_wrap)
+from repro.runtime.fleet import (AdmissionDecision, BrownoutPolicy,
+                                 DegradedResult, FleetController,
+                                 FleetPolicy, PriorityClass)
 from repro.runtime.lm import LMEngine, LMRequest
 from repro.runtime.protocol import (Steppable, step_cost_seconds,
                                     supports_cancel, supports_health_check,
-                                    supports_recover, supports_resize)
+                                    supports_preempt, supports_recover,
+                                    supports_resize)
 from repro.runtime.runtime import FailurePolicy, RetunePolicy, Runtime
 from repro.runtime.telemetry import (ArrivalEstimator, EngineTelemetry,
                                      should_retune)
 
 __all__ = [
-    "ArrivalEstimator", "ChaosEngine", "DeadlineExceededError",
-    "EngineDeadError", "EngineTelemetry", "FailurePolicy", "FaultError",
-    "FaultPlan", "InjectedFault", "LMEngine", "LMRequest", "RetunePolicy",
-    "Runtime", "ShedError", "Steppable", "WedgedError", "maybe_chaos_wrap",
-    "should_retune", "step_cost_seconds", "supports_cancel",
-    "supports_health_check", "supports_recover", "supports_resize",
+    "AdmissionDecision", "ArrivalEstimator", "BrownoutPolicy", "ChaosEngine",
+    "DeadlineExceededError", "DegradedResult", "EngineDeadError",
+    "EngineTelemetry", "FailurePolicy", "FaultError", "FaultPlan",
+    "FleetController", "FleetPolicy", "InjectedFault", "LMEngine",
+    "LMRequest", "PriorityClass", "RetunePolicy", "Runtime", "ShedError",
+    "Steppable", "WedgedError", "maybe_chaos_wrap", "should_retune",
+    "step_cost_seconds", "supports_cancel", "supports_health_check",
+    "supports_preempt", "supports_recover", "supports_resize",
 ]

@@ -113,16 +113,24 @@ class FaultPlan:
     hang_s: float = 0.0
     submit_reject_rate: float = 0.0  # submit() raises InjectedFault
     corrupt_rate: float = 0.0  # a live resonator row turns non-finite
+    # submit storm: one caller submit fans out into storm_burst extra
+    # phantom copies on the inner engine — a stampeding-client / retry-loop
+    # overload that inflates the backlog the fleet's admission control
+    # prices (the phantoms complete engine-side but belong to no future)
+    storm_rate: float = 0.0
+    storm_burst: int = 0
     max_faults: int | None = None
 
     def __post_init__(self):
         for f in ("step_error_rate", "hang_rate", "submit_reject_rate",
-                  "corrupt_rate"):
+                  "corrupt_rate", "storm_rate"):
             v = getattr(self, f)
             if not 0.0 <= v <= 1.0:
                 raise ValueError(f"{f} must be a probability, got {v}")
         if self.hang_rate > 0 and self.hang_s <= 0:
             raise ValueError("hang_rate > 0 needs a positive hang_s")
+        if self.storm_rate > 0 and self.storm_burst < 1:
+            raise ValueError("storm_rate > 0 needs storm_burst >= 1")
 
 
 class ChaosEngine:
@@ -135,6 +143,10 @@ class ChaosEngine:
 
       * **submit rejection** — ``submit()`` raises :class:`InjectedFault`
         before the inner engine sees the payload (a poisoned request);
+      * **submit storm** — ``submit()`` fans the payload into
+        ``storm_burst`` extra phantom submissions on the inner engine (a
+        stampeding retry loop): backlog inflates, which is exactly the
+        signal fleet admission control sheds on;
       * **step exception** — ``step()`` raises before the inner step runs
         (a crashed kernel; inner state is untouched, exactly like a device
         error surfacing through a jitted call);
@@ -158,7 +170,7 @@ class ChaosEngine:
         self._submit_rng = np.random.default_rng([plan.seed, 1])
         self._row_rng = np.random.default_rng([plan.seed, 2])
         self.injected = {"step_error": 0, "hang": 0, "submit_reject": 0,
-                         "corrupt": 0}
+                         "corrupt": 0, "storm": 0}
 
     # -- injection machinery ----------------------------------------------
 
@@ -210,10 +222,20 @@ class ChaosEngine:
             obs.count("chaos_injected", 1, kind=kind)
 
     def submit(self, payload, **kwargs) -> int:
+        # fixed draw order (reject, then storm) on the submit stream, so
+        # the k-th submit's decisions stay a pure function of (seed, k)
         if self._fire(self._submit_rng, self.plan.submit_reject_rate,
                       "submit_reject"):
             self._mark("submit_reject")
             raise InjectedFault("injected submit rejection")
+        if self._fire(self._submit_rng, self.plan.storm_rate, "storm"):
+            # phantom duplicates hit the inner engine directly: they burn
+            # slots and inflate in_flight (the overload signal admission
+            # control reads) but no future ever owns their ids — the
+            # runtime's finish loop drops unknown local ids on the floor
+            self._mark("storm")
+            for _ in range(self.plan.storm_burst):
+                self.inner.submit(payload, **kwargs)
         return self.inner.submit(payload, **kwargs)
 
     def step(self) -> list:

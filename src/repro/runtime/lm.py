@@ -63,6 +63,7 @@ class LMRequest:
     meta: Any
     submit_time: float
     sampling: SamplingSpec | None = None  # None = greedy
+    priority: int = 0  # queue order: lower serves first (fleet classes)
     tokens: list = dataclasses.field(default_factory=list)  # generated ids
     result: Any = None  # {"tokens": ..., "text_len": ...} convenience dict
     truncated: bool = False  # KV capacity parked the slot before a stop
@@ -171,12 +172,15 @@ class LMEngine:
     # -- request intake ----------------------------------------------------
 
     def submit(self, prompt, *, max_new_tokens: int = 32, meta=None,
-               sampling: SamplingSpec | None = None) -> int:
+               sampling: SamplingSpec | None = None,
+               priority: int = 0) -> int:
         """Enqueue one prompt; returns the request id.  Prompts that cannot
         fit the KV capacity at all are rejected here (the per-token guard
         then parks slots that fill up mid-generation).  ``sampling`` picks
         temperature/top-k decoding for this request (None = greedy); the
-        per-request seed makes replay after recover/resize bit-equal."""
+        per-request seed makes replay after recover/resize bit-equal.
+        ``priority`` orders the queue (lower serves first; FIFO within a
+        priority)."""
         prompt = jnp.asarray(prompt, jnp.int32)
         if prompt.ndim != 1 or prompt.shape[0] == 0:
             raise ValueError("submit expects a non-empty 1-D token prompt")
@@ -188,7 +192,8 @@ class LMEngine:
             raise TypeError(
                 f"sampling= expects a SamplingSpec or None, got {sampling!r}")
         req = LMRequest(self._next_id, prompt, int(max_new_tokens), meta,
-                        self._clock(), sampling=sampling)
+                        self._clock(), sampling=sampling,
+                        priority=int(priority))
         self._next_id += 1
         self._queue.append(req)
         self.obs.count("submitted", 1, engine=self.obs_track)
@@ -196,15 +201,28 @@ class LMEngine:
 
     # -- serving loop ------------------------------------------------------
 
+    def _next_index(self) -> int:
+        """Queue discipline: lowest ``(priority, id)`` first.  Request ids
+        are monotonic, so uniform priorities reduce to exact FIFO."""
+        best_i, best = 0, None
+        for i, req in enumerate(self._queue):
+            k = (req.priority, req.id)
+            if best is None or k < best:
+                best_i, best = i, k
+        return best_i
+
     def _fill(self) -> None:
         for slot in range(self.slots):
             if self._owner[slot] is not None or not self._queue:
                 continue
-            # paged: a drained pool defers admission (FIFO order preserved)
-            # until retiring slots release blocks — parking, not rejection
-            if not self.serve.can_admit(int(self._queue[0].prompt.shape[0])):
+            i = self._next_index()
+            req = self._queue[i]
+            # paged: a drained pool defers admission (priority order
+            # preserved — the BEST candidate parks) until retiring slots
+            # release blocks — parking, not rejection
+            if not self.serve.can_admit(int(req.prompt.shape[0])):
                 break
-            req = self._queue.popleft()
+            del self._queue[i]
             self._owner[slot] = req
             self.serve.add_request(slot, req.prompt, sampling=req.sampling)
 
@@ -361,10 +379,33 @@ class LMEngine:
                 sp.args["replayed"] = len(live)
         return len(live)
 
+    def preempt(self, request_id: int) -> int:
+        """Bit-safe preemption: free the request's slot (the device layer
+        stops decoding it and, when paged, returns its KV blocks to the
+        pool) and RE-QUEUE it at the front — the :meth:`recover` contract.
+        On re-fill it prefills from scratch; deterministic greedy decoding
+        (and the per-request sampling seed) regenerates the same token
+        stream, so the replayed stream is bit-equal to an undisturbed run,
+        just later.  Queued requests are untouched.  Returns 1 when a live
+        slot was preempted, else 0.
+        """
+        for slot, req in enumerate(self._owner):
+            if req is not None and req.id == request_id:
+                self._owner[slot] = None
+                self.serve.release_slot(slot)
+                self._queue.appendleft(req)
+                self.obs.instant("preempt", track=self.obs_track,
+                                 cat="engine",
+                                 args={"request": request_id, "rows": 1})
+                return 1
+        return 0
+
     def cancel(self, request_id: int) -> bool:
-        """Preempt one request: drop it from the queue or free its slot
+        """Cancel one request: drop it from the queue or free its slot
         (the device layer stops decoding it and, when paged, returns its
-        KV blocks to the pool).  Returns whether anything was reclaimed.
+        KV blocks to the pool).  Work is discarded — see :meth:`preempt`
+        for the bit-safe re-queue flavor.  Returns whether anything was
+        reclaimed.
         """
         for i, req in enumerate(self._queue):
             if req.id == request_id:
@@ -382,6 +423,17 @@ class LMEngine:
     @property
     def in_flight(self) -> int:
         return sum(o is not None for o in self._owner) + len(self._queue)
+
+    def live_requests(self) -> dict:
+        """``{request_id: {"priority": p, "rows": 1}}`` for slotted requests
+        — the fleet controller's preemption-victim view."""
+        return {req.id: {"priority": req.priority, "rows": 1}
+                for req in self._owner if req is not None}
+
+    def queued_requests(self) -> dict:
+        """``{request_id: {"priority": p, "rows": 1}}`` for queued requests."""
+        return {req.id: {"priority": req.priority, "rows": 1}
+                for req in self._queue}
 
     def step_cost_s(self) -> float:
         return self._step_cost

@@ -38,6 +38,12 @@ Five optional members refine the runtime's behavior when present:
   * ``health_check() -> str | None`` — cadenced corruption probe (e.g.
     non-finite resonator state); a non-None description routes the engine
     through the same quarantine/replay path as a step exception.
+  * ``preempt(local_id) -> int`` — bit-safe preemption: park the request's
+    live rows and RE-QUEUE them from their pinned keys (the ``recover``
+    replay contract), unlike ``cancel`` which discards the work.  The
+    fleet controller uses it to clear slots for higher-priority classes;
+    with it come ``live_requests()``/``queued_requests()`` introspection
+    (``{local_id: {"priority": p, "rows": n}}``) for victim selection.
 """
 from __future__ import annotations
 
@@ -95,3 +101,10 @@ def supports_cancel(engine) -> bool:
 def supports_health_check(engine) -> bool:
     """Whether the supervisor's cadenced corruption probe applies."""
     return callable(getattr(engine, "health_check", None))
+
+
+def supports_preempt(engine) -> bool:
+    """Whether the fleet controller may preempt-and-requeue live requests
+    (bit-safe replay from pinned keys — unlike ``cancel``, no work is
+    discarded, only deferred)."""
+    return callable(getattr(engine, "preempt", None))

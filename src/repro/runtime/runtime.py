@@ -36,6 +36,17 @@ engine's warm-handoff ``resize`` — in-flight rows carry over bit-exactly,
 so a re-tune is invisible to request trajectories (asserted in
 tests/test_runtime.py).
 
+**Fleet control** (optional, ``Runtime(fleet=FleetPolicy(...))``).  A
+:class:`~repro.runtime.fleet.FleetController` adds overload policy on top
+of the per-engine machinery: priority-class admission (estimated queue
+wait sheds/degrades by class instead of tail-dropping at ``max_pending``),
+bit-safe preemption of low-priority live rows, a global slot budget moved
+between engines through the ``resize`` warm handoff, and brownout modes
+that trim best-effort budgets with a structured
+:class:`~repro.runtime.fleet.DegradedResult` marker.  Every decision is
+narrated on the supervisor obs track; ``stats()["fleet"]`` exposes the
+counters.
+
 **Supervision.**  Failure of one engine must not take down the rest — the
 runtime's availability contract is *per-engine*, driven by each engine's
 :class:`FailurePolicy`:
@@ -92,6 +103,7 @@ from concurrent.futures import Future, TimeoutError as FutureTimeout
 from repro import obs as obs_mod
 from repro.engine.sharding.autotune import retune_slots
 from repro.runtime import faults as flt
+from repro.runtime import fleet as flc
 from repro.runtime import telemetry as tele
 from repro.runtime.protocol import (step_cost_seconds, supports_cancel,
                                     supports_health_check, supports_recover,
@@ -163,7 +175,8 @@ class Runtime:
     def __init__(self, *, clock=None, idle_sleep_s: float = 1e-3,
                  max_pending: int | None = None,
                  watchdog_s: float | None = 180.0,
-                 failure: FailurePolicy | None = None, obs=None, slo=None):
+                 failure: FailurePolicy | None = None, obs=None, slo=None,
+                 fleet=None):
         # Observability: explicit recorder > REPRO_OBS=1 env seam > NULL
         # (free).  register() rebinds default-built engines onto this
         # recorder so the whole stack traces on ONE monotonic clock; the
@@ -201,6 +214,29 @@ class Runtime:
         self._was_busy: set = set()
         self._steps_since_check: dict = {}
         self._pending: deque = deque()  # (name, gid, payload, kwargs, t_sub)
+        self._staged: dict = {}  # name -> staged-not-yet-ingested count
+        self._degraded: dict = {}  # gid -> (class, mode, trims) marker
+        self._rejected: set = set()  # gids refused at ingest (shed, not fail)
+        # Fleet controller (runtime/fleet.py): priority-class admission,
+        # bit-safe preemption, global slot rebalancing, brownout.  ``fleet``
+        # is a FleetPolicy or a ready FleetController; None disables all
+        # four (the pre-fleet behavior).  bind() injects this runtime's live
+        # environment — the engines dict is held by reference, so engines
+        # registered later are visible to the controller.
+        if fleet is None:
+            self.fleet = None
+        else:
+            ctrl = fleet if isinstance(fleet, flc.FleetController) \
+                else flc.FleetController(fleet)
+            self.fleet = ctrl.bind(
+                self._engines,
+                unit_s_fn=lambda n: self.telemetry[n].step_unit_s(),
+                backlog_fn=self._fleet_backlog,
+                class_of=self._class_of_local,
+                slo_fn=self.slo.snapshot,
+                serving_fn=lambda n: self._sup[n].state == "serving",
+                telemetry=self.telemetry,
+                obs=self.obs, clock=self._clock)
         self._futures: dict = {}  # gid -> Future
         self._req_class: dict = {}  # gid -> (class label, submit time)
         self._req_spans: dict = {}  # gid -> open request-lifecycle span id
@@ -231,10 +267,11 @@ class Runtime:
         overrides the runtime's default :class:`FailurePolicy` for it."""
         if name in self._engines:
             raise ValueError(f"engine {name!r} already registered")
-        if name == "slo":
+        if name in ("slo", "fleet"):
             raise ValueError(
-                "engine name 'slo' is reserved: Runtime.stats() exposes the "
-                "per-class SLO snapshot under that key")
+                f"engine name {name!r} is reserved: Runtime.stats() exposes "
+                "the per-class SLO snapshot and the fleet-controller "
+                "snapshot under those keys")
         engine = flt.maybe_chaos_wrap(engine)  # CI transparency run hook
         # Engines built with the defaults join this runtime's recorder under
         # their registered name — one recorder, one clock, one trace for the
@@ -342,7 +379,8 @@ class Runtime:
     # -- submission / results ----------------------------------------------
 
     def submit(self, engine: str, payload, *, deadline_s: float | None = None,
-               class_: str | None = None, **kwargs) -> int:
+               class_: str | None = None, priority: int | None = None,
+               **kwargs) -> int:
         """Enqueue a request for `engine`; returns a runtime-global id
         immediately (the stepper thread performs the actual engine.submit).
 
@@ -350,13 +388,19 @@ class Runtime:
         landed when it elapses, the future fails with
         :class:`DeadlineExceededError` and the request's slot is reclaimed
         via the engine's preemption-safe ``cancel``.  Submits can fail fast
-        with :class:`ShedError` (bounded pending queue full) or
-        :class:`EngineDeadError` (the engine was removed from service).
+        with :class:`ShedError` (bounded pending queue full, or fleet
+        admission control shedding the class under load) or
+        :class:`EngineDeadError` (the engine was removed from service) —
+        both count as *shed* in telemetry and the SLO tracker.
 
         ``class_`` labels the request for per-class SLO accounting
         (``stats()["slo"]``, span args, latency histograms); it defaults to
         the engine's ``engine_kind`` ("factorizer", "lm", ...) so unlabeled
-        traffic still aggregates into meaningful classes.
+        traffic still aggregates into meaningful classes.  Under a fleet
+        controller the class also resolves the engine queue ``priority``
+        (overridable per request) and may come back *degraded*: admitted
+        with trimmed budgets and the result wrapped in
+        :class:`~repro.runtime.fleet.DegradedResult`.
         """
         if engine not in self._engines:
             raise KeyError(f"unknown engine {engine!r}; registered: "
@@ -369,6 +413,11 @@ class Runtime:
         cls = class_ if class_ is not None else \
             getattr(self._engines[engine], "engine_kind", engine)
         if self._sup[engine].state == "dead":
+            # a rejection flavor like any other: no future will exist, so
+            # account the shed here (the SLOTracker's shed_rate must cover
+            # every refusal, not only the max_pending path)
+            self.telemetry[engine].shed += 1
+            self.slo.on_shed(cls)
             raise flt.EngineDeadError(
                 f"engine {engine!r} was removed from service",
                 engine=engine) from self._sup[engine].last_error
@@ -383,12 +432,37 @@ class Runtime:
                 f"pending queue full ({self._max_pending}); request shed",
                 engine=engine)
         now = self._clock()
+        decision = None
+        if self.fleet is not None:
+            # Class-aware admission: estimated queue wait (measured
+            # step_unit_s EWMA x backlog) against the class's thresholds.
+            # The backlog read is racy-by-one vs the stepper — a stale
+            # estimate shifts a threshold comparison, never correctness.
+            decision = self.fleet.admit(engine, cls, priority=priority,
+                                        now=now)
+            if decision.action == "shed":
+                self.telemetry[engine].shed += 1
+                self.slo.on_shed(cls)
+                raise flt.ShedError(
+                    f"admission control shed class {cls!r} for engine "
+                    f"{engine!r}: {decision.reason}", engine=engine)
+            if priority is None:
+                priority = decision.priority
+            if decision.action == "degrade":
+                kwargs = decision.apply(kwargs)
+                self.telemetry[engine].degraded += 1
+        if priority is not None:
+            kwargs = {**kwargs, "priority": int(priority)}
         fut: Future = Future()
         with self._submit_lock:
             gid = self._next_gid
             self._next_gid += 1
             self._futures[gid] = fut
             self._req_class[gid] = (cls, now)
+            self._staged[engine] = self._staged.get(engine, 0) + 1
+            if decision is not None and decision.action == "degrade":
+                self._degraded[gid] = (cls, decision.mode,
+                                       dict(decision.trims))
             if deadline_s is not None:
                 heapq.heappush(self._deadlines,
                                (now + float(deadline_s), gid, engine))
@@ -423,6 +497,10 @@ class Runtime:
         Runs on whichever thread resolved the future (stepper, deadline
         expiry, stop()); everything here is host-side scalar work."""
         cls, t_sub = self._req_class.pop(gid, (None, None))
+        with self._submit_lock:
+            rejected = gid in self._rejected
+            self._rejected.discard(gid)
+            self._degraded.pop(gid, None)  # failed before its wrap
         exc = fut.exception()
         if cls is not None:
             if exc is None:
@@ -435,6 +513,11 @@ class Runtime:
                                      **{"class": cls})
             elif isinstance(exc, flt.DeadlineExceededError):
                 self.slo.on_deadline_miss(cls)
+            elif rejected:
+                # refused at ingest (dead engine, chaos submit rejection):
+                # never served, so it belongs in the shed column — the
+                # tracker un-counts the submit it already recorded
+                self.slo.on_rejected(cls)
             else:
                 self.slo.on_failure(cls)
         sid = self._req_spans.pop(gid, None)
@@ -517,6 +600,8 @@ class Runtime:
         # (register() refuses an engine named "slo"); computed outside the
         # engine locks — the tracker has its own.
         out["slo"] = self.slo.snapshot()
+        if self.fleet is not None:  # "fleet" is reserved like "slo"
+            out["fleet"] = self.fleet.snapshot()
         return out
 
     def _sup_snapshot(self, name: str) -> dict:
@@ -531,31 +616,76 @@ class Runtime:
     def _ingest(self) -> None:
         while self._pending:
             name, gid, payload, kwargs, t_sub = self._pending.popleft()
-            fut = self._futures.get(gid)
-            if fut is None or fut.done():  # consumed / deadline-expired
-                continue
-            if self._sup[name].state == "dead":
-                fut.set_exception(flt.EngineDeadError(
-                    f"engine {name!r} was removed from service",
-                    engine=name))
-                continue
             try:
-                local = self._engines[name].submit(payload, **kwargs)
-            except Exception as e:  # bad request: fail ITS future, keep serving
-                fut.set_exception(e)
-                continue
-            self._gid_of[(name, local)] = gid
-            self._local_of[gid] = (name, local)
-            if self.obs.enabled:
-                self.obs.instant("admit", track="requests",
-                                 parent=self._req_spans.get(gid),
-                                 cat="request",
-                                 args={"gid": gid, "engine": name,
-                                       "local_id": local})
-            # Arrival telemetry stamps HERE, on successful ingest, with the
-            # request's submit timestamp — a rejected or shed request must
-            # not inflate the EWMA arrival rate into bogus re-tunes.
-            self.telemetry[name].on_submit(t_sub)
+                self._ingest_one(name, gid, payload, kwargs, t_sub)
+            finally:
+                # The staged count must not drop until the request is ON
+                # the engine (or refused): engine.submit can be slow (first
+                # call compiles), and decrementing up front opens a window
+                # where a concurrent admission reads backlog 0 and waves
+                # overload straight through.
+                with self._submit_lock:
+                    if self._staged.get(name, 0) > 0:
+                        self._staged[name] -= 1
+
+    def _ingest_one(self, name, gid, payload, kwargs, t_sub) -> None:
+        fut = self._futures.get(gid)
+        if fut is None or fut.done():  # consumed / deadline-expired
+            return
+        if self._sup[name].state == "dead":
+            self._mark_rejected(gid, name)
+            fut.set_exception(flt.EngineDeadError(
+                f"engine {name!r} was removed from service",
+                engine=name))
+            return
+        try:
+            local = self._engines[name].submit(payload, **kwargs)
+        except Exception as e:  # bad request: fail ITS future, keep serving
+            self._mark_rejected(gid, name)
+            fut.set_exception(e)
+            return
+        self._gid_of[(name, local)] = gid
+        self._local_of[gid] = (name, local)
+        if self.obs.enabled:
+            self.obs.instant("admit", track="requests",
+                             parent=self._req_spans.get(gid),
+                             cat="request",
+                             args={"gid": gid, "engine": name,
+                                   "local_id": local})
+        # Arrival telemetry stamps HERE, on successful ingest, with the
+        # request's submit timestamp — a rejected or shed request must
+        # not inflate the EWMA arrival rate into bogus re-tunes.
+        self.telemetry[name].on_submit(t_sub)
+
+    def _mark_rejected(self, gid: int, name: str) -> None:
+        """Tag a post-future refusal (dead engine at ingest, engine submit
+        exception) BEFORE failing the future: the done-callback then routes
+        it to ``SLOTracker.on_rejected`` (shed, not failed), and telemetry
+        counts it next to the pre-future sheds."""
+        self.telemetry[name].shed += 1
+        with self._submit_lock:
+            self._rejected.add(gid)
+
+    # -- fleet controller environment ---------------------------------------
+
+    def _fleet_backlog(self, name: str) -> int:
+        """Backlog the admission estimate prices: rows on the engine plus
+        staged submissions the stepper has not ingested yet (without the
+        staged term a submit burst would be invisible to admission until
+        the next loop pass)."""
+        eng = self._engines.get(name)
+        base = int(getattr(eng, "in_flight", 0)) if eng is not None else 0
+        with self._submit_lock:
+            return base + self._staged.get(name, 0)
+
+    def _class_of_local(self, name: str, local: int) -> str | None:
+        """Request class of a live engine-local id (preemption victim
+        filtering); None for ids the runtime did not place."""
+        gid = self._gid_of.get((name, local))
+        if gid is None:
+            return None
+        rec = self._req_class.get(gid)
+        return rec[0] if rec else None
 
     def _expire_deadlines(self, now: float) -> None:
         """Fail (and preempt) every armed request whose budget elapsed."""
@@ -765,6 +895,12 @@ class Runtime:
             if gid is not None:
                 self._local_of.pop(gid, None)
             if fut is not None and not fut.done():
+                mark = self._degraded.pop(gid, None)
+                if mark is not None:
+                    # brownout-trimmed admission: the caller gets a
+                    # structured marker around the (degraded) answer, not
+                    # a silently-worse result
+                    req.result = flc.DegradedResult(req.result, *mark)
                 fut.set_result(req)
             # the future now owns the result; drop the engine's reference so
             # a long-running runtime doesn't accumulate every Request ever
@@ -864,6 +1000,11 @@ class Runtime:
                                            args={"engine": name}):
                             self._step_one(name, gen)
                         self._maybe_retune(name)
+                        if self.fleet is not None:
+                            # fleet control tick: preemption, brownout
+                            # state, cadenced global slot rebalancing —
+                            # under the loop lock like every engine access
+                            self.fleet.control(now=self._clock())
                 if name is None:
                     self._wake.wait(self._idle_sleep_s)
                     self._wake.clear()

@@ -105,7 +105,12 @@ class EngineTelemetry:
     recoveries: int = 0  # successful rebuild + replay cycles
     replayed: int = 0  # in-flight rows re-queued across those recoveries
     deadline_misses: int = 0  # futures failed by submit(deadline_s=) expiry
-    shed: int = 0  # submissions refused by the bounded pending queue
+    # submissions refused before service — the bounded pending queue,
+    # fleet admission control, and rejections at ingest (dead engine,
+    # chaos submit faults) all land here:
+    shed: int = 0
+    preempted: int = 0  # live rows preempted + re-queued by fleet control
+    degraded: int = 0  # submissions admitted with brownout-trimmed budgets
     tuned_rate: float | None = None  # arrival estimate at the last (re)tune
     queue_depth: int = 0  # latest observed engine.in_flight
     utilization: float = 0.0  # EWMA of busy-slot fraction per step
@@ -199,6 +204,8 @@ class EngineTelemetry:
             "replayed": self.replayed,
             "deadline_misses": self.deadline_misses,
             "shed": self.shed,
+            "preempted": self.preempted,
+            "degraded": self.degraded,
             "queue_depth": self.queue_depth,
             "utilization": round(self.utilization, 4),
             "arrival_rate_rps": self.arrivals.rate(now),

@@ -171,7 +171,8 @@ def test_chaos_zero_rates_transparent():
         out += ce.step()
     assert [r.id for r in out] == ids
     assert ce.stats()["chaos"] == {"step_error": 0, "hang": 0,
-                                   "submit_reject": 0, "corrupt": 0}
+                                   "submit_reject": 0, "corrupt": 0,
+                                   "storm": 0}
 
 
 def test_maybe_chaos_wrap_env_gated(monkeypatch):
@@ -412,6 +413,56 @@ def test_lm_engine_recover_replays_bit_equal():
     assert eng.recover() == 2 and eng.recoveries_total == 1
     done = {r.id: r for r in eng.drain()}
     for p, rid in zip(prompts, ids):  # greedy decode: bit-equal re-generation
+        ref = ServeEngine(cfg_lm, params, 1, 32)
+        ref.add_request(0, p)
+        for _ in range(5):
+            ref.step()
+        assert done[rid].result["tokens"] == ref.generated[0][1:6]
+
+
+def test_engine_preempt_replays_bit_equal(lvrf_setup):
+    """preempt() — the fleet controller's slot-reclaim seam — re-queues a
+    live request through the same pinned-key contract as recover() and
+    resize-shrink: the preempted rows restart from their keys and finish
+    bit-equal to a solo factorize(), while the freed slot serves the
+    higher-priority queued work first (priority fill)."""
+    spec, cfg, atoms = lvrf_setup
+    _, good, junk = _lvrf_queries(cfg, atoms, n_good=2, n_junk=2, seed=21)
+    keys = jax.random.split(jax.random.PRNGKey(13), 4)
+    eng = engine.Engine(spec, slots=2, sweeps_per_step=2)
+    jids = [eng.submit(junk[i], keys=keys[i][None], priority=2)
+            for i in range(2)]
+    eng.step()  # junk grabs both slots, burning toward max_iters
+    assert set(eng.live_requests()) == set(jids)
+    gids = [eng.submit(good[i], keys=keys[2 + i][None], priority=0)
+            for i in range(2)]  # higher priority, stuck behind live junk
+    inflight_before = eng.in_flight
+    assert eng.preempt(jids[0]) == 1  # one live row parked back on the queue
+    assert eng.preempt(999) == 0  # unknown id: nothing to preempt
+    assert eng.in_flight == inflight_before  # nothing lost nor duplicated
+    assert jids[0] in eng.queued_requests()  # parked, not cancelled
+    done = {r.id: r for r in eng.drain()}
+    qs = list(junk) + list(good)
+    for i, rid in enumerate(jids + gids):
+        _assert_bit_equal_solo(done[rid], qs[i], keys[i], spec)
+
+
+def test_lm_engine_preempt_replays_bit_equal():
+    """A preempted mid-generation LM stream re-queues from its pinned
+    prompt and regenerates bit-equal to an undisturbed solo decode — the
+    same deterministic-replay argument as LM recover()."""
+    cfg_lm = ARCHS["llama3.2-3b"].smoke()
+    params, _ = T.init(jax.random.PRNGKey(0), cfg_lm)
+    prompts = [jax.random.randint(jax.random.PRNGKey(i), (4 + i,), 0,
+                                  cfg_lm.vocab) for i in range(2)]
+    eng = rt.LMEngine(cfg_lm, params, slots=2, max_len=32)
+    ids = [eng.submit(p, max_new_tokens=5, priority=i) for i, p in
+           enumerate(prompts)]
+    eng.step()  # partial generations in flight
+    assert eng.preempt(ids[1]) == 1
+    assert eng.preempt(999) == 0
+    done = {r.id: r for r in eng.drain()}
+    for p, rid in zip(prompts, ids):
         ref = ServeEngine(cfg_lm, params, 1, 32)
         ref.add_request(0, p)
         for _ in range(5):

@@ -77,6 +77,33 @@ def test_structural_replay_is_deterministic(problems):
     assert a["structural"]["lm"]["kv_bytes_touched"] > 0
 
 
+def test_overload_trace_carries_classes():
+    tr = traffic.make_trace("overload", seed=3, events=40)
+    assert {ev.cls for ev in tr} == {"interactive", "best_effort"}
+    # classless kinds stay classless (replays fall back to engine names)
+    plain = traffic.make_trace("bursty", seed=3, events=40)
+    assert all(ev.cls == "" for ev in plain)
+
+
+def test_structural_overload_fleet_replay_is_deterministic(problems):
+    tr = traffic.make_trace("overload", seed=0, events=24, duration_s=1.0)
+    sps = traffic.overload_config(0, 24, 1.0)["steps_per_s"]
+    a = traffic.replay_structural(tr, problems, steps_per_s=sps,
+                                  fleet=traffic.overload_fleet(sps))
+    b = traffic.replay_structural(tr, problems, steps_per_s=sps,
+                                  fleet=traffic.overload_fleet(sps))
+    assert a["digest"] == b["digest"]
+    assert a["structural"] == b["structural"]
+    assert a["fleet"] == b["fleet"]
+    # conservation: every arrival either served to a result or shed — the
+    # controller never loses a request
+    assert len(a["submit_seq"]) + len(a["shed_seq"]) == 24
+    assert len(a["results"]) == len(a["submit_seq"])
+    # per-class decision counters rode into the gated structural dict
+    assert any(k.startswith("class_") for k in a["structural"])
+    assert "fleet" in a["structural"]
+
+
 # ---------------------------------------------------------------------------
 # regression gate
 # ---------------------------------------------------------------------------
